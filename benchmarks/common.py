@@ -1,0 +1,28 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import numpy as np
+
+QUICK = os.environ.get("REPRO_BENCH_QUICK", "1") == "1"
+
+
+def time_fn(fn, *args, iters: int = 20, warmup: int = 3):
+    """Median wall time per call in microseconds (blocking)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return 1e6 * float(np.median(ts))
+
+
+def emit(name: str, us_per_call: float, derived):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,108 @@
+"""Shared driver: posterior sampling over classification models (the
+paper's Fig. 2 experiment machinery).
+
+Metric identical to the paper: negative log likelihood of the *posterior
+predictive* on held-out data, over sampling steps.  For parallel samplers
+the predictive averages over all K chains (Bayesian model averaging) —
+that, not single-chain quality, is what a sampler earns its keep for.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import math
+
+from repro import core
+from repro.data.pipeline import ShardedLoader
+
+
+def sgd_map(lr: float, beta: float = 0.9):
+    """Map SGD-with-momentum (lr, beta) to SGHMC (step_size, friction):
+    eps = sqrt(lr (1-beta)), V = (1-beta)/eps.  Equilibrium step eps/V = lr
+    and momentum decay per step = eps*V = 1-beta — the scale-adapted SGHMC
+    parameterization that makes burn-in practical."""
+    eps = math.sqrt(lr * (1.0 - beta))
+    return eps, (1.0 - beta) / eps
+
+
+def run_sampling(
+    apply_fn,  # (params, x) -> logits
+    nll_fn,  # (params, batch) -> (sum_nll, count)
+    init_params_fn,  # (rng) -> params (single chain)
+    sampler,
+    num_chains: int,
+    train,  # (x, y)
+    test,  # (x, y)
+    *,
+    n_data: int,
+    steps: int,
+    batch_size: int = 100,
+    eval_every: int = 20,
+    weight_decay: float = 1e-5,
+    burnin_frac: float = 0.25,
+    seed: int = 0,
+):
+    prior = core.gaussian_prior(weight_decay)
+    pot = core.make_potential(nll_fn, n_data=n_data, prior=prior)
+    params1 = init_params_fn(jax.random.PRNGKey(seed))
+    stacked = num_chains > 1 or sampler.grad_targets is not None
+    if num_chains > 1:
+        params = core.tree_broadcast_axis0(params1, num_chains)
+    else:
+        params = params1
+    state = sampler.init(params)
+    loader = ShardedLoader(train[0], train[1], batch_size, num_chains, seed)
+    xt, yt = jnp.asarray(test[0]), jnp.asarray(test[1])
+
+    grad_pot = jax.vmap(pot.grad) if num_chains > 1 else pot.grad
+
+    @jax.jit
+    def step_fn(params, state, batch, key):
+        targets = sampler.grad_targets(state, params) if sampler.grad_targets else params
+        if sampler.grad_targets is not None and num_chains == 1:
+            # async sampler: targets carry a worker axis; batch needs one too
+            g = jax.vmap(pot.grad)(targets, batch)
+        else:
+            g = grad_pot(targets, batch)
+        upd, state = sampler.update(g, state, params=params, rng=key)
+        return core.apply_updates(params, upd), state
+
+    @jax.jit
+    def predictive_nll(prob_sum, n_models):
+        probs = prob_sum / n_models
+        logp = jnp.log(jnp.maximum(probs, 1e-12))
+        gold = jnp.take_along_axis(logp, yt[:, None], axis=-1)[:, 0]
+        return -jnp.mean(gold)
+
+    @jax.jit
+    def chain_probs(params):
+        f = lambda p: jax.nn.softmax(apply_fn(p, xt).astype(jnp.float32), -1)
+        if num_chains > 1:
+            return jnp.sum(jax.vmap(f)(params), axis=0)
+        return f(params)
+
+    key = jax.random.PRNGKey(seed + 1)
+    curve = []
+    prob_sum = jnp.zeros((xt.shape[0], 10), jnp.float32)
+    n_acc = 0
+    burnin = int(steps * burnin_frac)
+    for t in range(steps):
+        batch = loader.batch(t)
+        if sampler.grad_targets is not None and num_chains == 1:
+            # async needs K worker batches
+            k_workers = jax.tree.leaves(state.snapshots)[0].shape[0]
+            wl = ShardedLoader(train[0], train[1], batch_size, k_workers, seed)
+            batch = wl.batch(t)
+        key, sub = jax.random.split(key)
+        params, state = step_fn(params, state, batch, sub)
+        if (t + 1) % eval_every == 0:
+            if t >= burnin:  # accumulate posterior-predictive after burn-in
+                prob_sum = prob_sum + chain_probs(params)
+                n_acc += num_chains
+            cur = chain_probs(params)
+            nll_now = float(predictive_nll(cur, num_chains))
+            nll_avg = float(predictive_nll(prob_sum, max(n_acc, 1))) if n_acc else nll_now
+            curve.append({"step": t + 1, "nll": nll_now, "nll_bma": nll_avg})
+    return params, curve

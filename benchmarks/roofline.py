@@ -1,0 +1,92 @@
+"""Roofline analysis (deliverable g): the three bound-terms per
+(arch x shape x mesh) cell.
+
+    compute    = FLOPs_per_device / peak_FLOP/s              [s]
+    memory     = HBM_bytes_per_device / HBM_bw               [s]
+    collective = collective_bytes_per_device / ICI_bw        [s]
+
+TERMS COME FROM THE ANALYTIC MODEL (src/repro/roofline/analytic.py), with
+the compiled dry-run artifacts as schedule evidence + cross-checks.  Reason
+(verified empirically, see EXPERIMENTS.md §Roofline): XLA cost_analysis()
+counts a scanned loop body ONCE, so its totals are structurally wrong for
+any scanned-layers program; its bytes-accessed assumes zero fusion.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+HW = {"peak_flops_bf16": 197e12, "hbm_bw": 819e9, "ici_bw": 50e9}
+ART = Path(__file__).resolve().parent / "artifacts" / "dryrun"
+
+
+def rows_analytic():
+    import sys
+
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+    from repro import configs
+    from repro.roofline import analyze_cell
+
+    rows = []
+    for arch, cell in configs.all_cells():
+        for mp in (False, True):
+            r = analyze_cell(arch, cell.name, multi_pod=mp)
+            rows.append(r)
+    return rows
+
+
+def hlo_evidence(arch, shape, multi_pod, tag=""):
+    mesh_tag = "pod2" if multi_pod else "pod1"
+    suffix = f"__{tag}" if tag else ""
+    p = ART / f"{arch}__{shape}__{mesh_tag}{suffix}.json"
+    if not p.exists():
+        return None
+    rec = json.loads(p.read_text())
+    return {
+        "compiled": True,
+        "colls": {k: v["count"] for k, v in rec.get("collectives", {}).items()},
+        "args_gb": rec.get("memory_analysis", {}).get("argument_size_in_bytes", 0) / 1e9,
+    }
+
+
+def markdown_table(rows) -> str:
+    hdr = (
+        "| arch | shape | mesh | K | compute (s) | memory (s) | collective (s) "
+        "| dominant | roofline frac | useful ratio | compiled | args/dev |\n"
+        "|---|---|---|---|---|---|---|---|---|---|---|---|\n"
+    )
+    lines = []
+    for r in rows:
+        ev = hlo_evidence(r["arch"], r["shape"], r["mesh"] == "2x16x16")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['chains']} "
+            f"| {r['compute_s']:.4g} | {r['memory_s']:.4g} | {r['collective_s']:.4g} "
+            f"| **{r['dominant']}** | {r['roofline_frac']:.2f} | {r['useful_ratio']:.2f} "
+            f"| {'yes' if ev else 'NO'} | {ev['args_gb']:.2f}GB |"
+            if ev
+            else f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['chains']} "
+            f"| {r['compute_s']:.4g} | {r['memory_s']:.4g} | {r['collective_s']:.4g} "
+            f"| **{r['dominant']}** | {r['roofline_frac']:.2f} | {r['useful_ratio']:.2f} | NO | - |"
+        )
+    return hdr + "\n".join(lines) + "\n"
+
+
+def run():
+    from common import emit
+
+    rows = rows_analytic()
+    for r in rows:
+        emit(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+            1e6 * max(r["compute_s"], r["memory_s"], r["collective_s"]),
+            f"dom={r['dominant']};frac={r['roofline_frac']:.2f};useful={r['useful_ratio']:.2f}",
+        )
+    out = Path(__file__).resolve().parent / "artifacts" / "roofline.md"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(markdown_table(rows))
+    emit("roofline/table_written", 0, str(out))
+    return rows
+
+
+if __name__ == "__main__":
+    print(markdown_table(rows_analytic()))

@@ -1,0 +1,49 @@
+"""Benchmark harness — one module per paper figure/table + system benches.
+Prints ``name,us_per_call,derived`` CSV.  REPRO_BENCH_QUICK=0 for the full
+paper-scale configurations (QUICK keeps the CPU-only run in minutes).
+
+  PYTHONPATH=src python -m benchmarks.run [--bench fig1_toy ...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+BENCHES = {
+    "fig1_toy": "fig1_toy_gaussian",  # paper Fig. 1
+    "fig2_mlp": "fig2_mnist_mlp",  # paper Fig. 2 left
+    "fig2_resnet": "fig2_cifar_resnet",  # paper Fig. 2 right
+    "staleness": "staleness_sweep",  # paper §2 analysis
+    "overhead": "sampler_overhead",  # sampler hot-loop + fused kernel
+    "roofline": "roofline",  # deliverable (g), reads dry-run artifacts
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", nargs="*", default=list(BENCHES), choices=list(BENCHES))
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    failures = []
+    for name in args.bench:
+        mod_name = BENCHES[name]
+        t0 = time.time()
+        try:
+            mod = __import__(mod_name)
+            mod.run()
+            print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+        except Exception as e:
+            failures.append(name)
+            print(f"# {name} FAILED: {e!r}", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(f"benchmarks failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

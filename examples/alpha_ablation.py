@@ -1,0 +1,49 @@
+"""Ablation: elastic-coupling strength alpha (EXPERIMENTS.md §Findings F2).
+
+Sweeps alpha on the 2-D Gaussian target and reports per-chain marginal
+variance (coupling shrinkage) and cross-chain spread (coherence) —
+quantifying the exploration/agreement trade-off the paper's Fig. 1 shows
+qualitatively.
+
+    PYTHONPATH=src python examples/alpha_ablation.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import core
+
+MU = jnp.array([2.0, -1.0])
+K, STEPS, BURN = 4, 8000, 2000
+
+
+def run_alpha(alpha: float):
+    sampler = core.ec_sghmc(step_size=5e-2, alpha=alpha, sync_every=4,
+                            noise_convention="eq4", center_noise_in_p=False)
+    params = jnp.zeros((K, 2))
+    state = sampler.init(params)
+
+    def body(carry, key):
+        p, st = carry
+        upd, st = sampler.update(p - MU, st, params=p, rng=key)
+        return (core.apply_updates(p, upd), st), p
+
+    keys = jax.random.split(jax.random.PRNGKey(0), STEPS)
+    (_, _), traj = jax.lax.scan(body, (params, state), keys)
+    t = np.asarray(traj[BURN:])  # (T, K, 2)
+    marg_var = float(t.reshape(-1, 2).var(0).mean())  # posterior target: 1.0
+    spread = float(t.var(axis=1).mean())  # cross-chain coherence
+    return marg_var, spread
+
+
+def main():
+    print(f"{'alpha':>8} {'marginal var (→1.0)':>22} {'cross-chain spread':>20}")
+    for alpha in (0.0, 0.01, 0.1, 0.5, 1.0, 2.0, 5.0):
+        v, s = run_alpha(alpha)
+        print(f"{alpha:8.2f} {v:22.3f} {s:20.4f}")
+    print("\nF2: coupling buys coherence (spread ↓) at the cost of marginal"
+          "\nvariance shrinkage (var < 1) — choose alpha per use-case.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""The paper's MNIST experiment in miniature (Fig. 2 left): compare
+SGHMC / Async-SGHMC / EC-SGHMC on the 2x800 MLP posterior and print the
+NLL curves.  Full-size with REPRO_BENCH_QUICK=0.
+
+    PYTHONPATH=src:benchmarks python examples/paper_mnist.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "benchmarks"))
+
+
+def main():
+    import fig2_mnist_mlp
+
+    results = fig2_mnist_mlp.run()
+    print("\nfinal posterior-predictive NLL:")
+    for name, nll in sorted(results.items(), key=lambda kv: kv[1]):
+        print(f"  {name:10s} {nll:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Serving example: batched greedy decoding with a chain-ensemble —
+averaging the predictive distribution over K posterior samples (the reason
+one runs EC-SGHMC in the first place: Bayesian model averaging at serve
+time).
+
+    PYTHONPATH=src python examples/serve_ensemble.py
+"""
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    print("== single model ==")
+    serve_main(["--arch", "qwen3-0.6b", "--smoke", "--batch", "4",
+                "--prompt-len", "16", "--gen", "8"])
+    print("== 3-sample posterior ensemble ==")
+    serve_main(["--arch", "qwen3-0.6b", "--smoke", "--batch", "4",
+                "--prompt-len", "16", "--gen", "8", "--ensemble", "3"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""End-to-end driver: posterior-sample the weights of an LM with EC-SGHMC,
+with checkpointing + auto-resume (kill it mid-run and re-run: it resumes).
+
+Uses the reduced qwen3 config so a few hundred steps run on CPU in minutes;
+pass --arch/--no-smoke for the real configs on a TPU pod.
+
+    PYTHONPATH=src python examples/train_lm.py            # ~200 steps
+    PYTHONPATH=src python examples/train_lm.py --preempt  # simulate a kill,
+                                                          # then resume
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+from repro.train.loop import Preempted
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--preempt", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    base = [
+        "--arch", args.arch, "--smoke", "--steps", str(args.steps),
+        "--chains", "4", "--sync-every", "4", "--batch", "2", "--seq", "64",
+        "--step-size", "5e-5", "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "25",
+    ]
+    if args.preempt:
+        try:
+            train_main(base + ["--preempt-at", str(args.steps // 2)])
+        except Preempted as e:
+            print(f"!! {e} — restarting, expecting auto-resume...")
+        history = train_main(base)
+    else:
+        history = train_main(base)
+    print(f"done: {len(history)} log points")
+
+
+if __name__ == "__main__":
+    main()

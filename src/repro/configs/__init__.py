@@ -1,0 +1,83 @@
+"""Architecture registry: ``--arch <id>`` -> ModelConfig (+ SMOKE variant),
+the input-shape grid, and per-arch deployment metadata (EC chain counts,
+long-context applicability).
+"""
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass
+
+ARCH_IDS = (
+    "gemma3-27b",
+    "gemma2-27b",
+    "h2o-danube-1.8b",
+    "qwen3-0.6b",
+    "grok-1-314b",
+    "olmoe-1b-7b",
+    "whisper-base",
+    "recurrentgemma-2b",
+    "xlstm-350m",
+    "qwen2-vl-7b",
+)
+
+_MODULES = {a: a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+
+
+def get_config(arch: str, smoke: bool = False):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; choose from {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+@dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+# long_500k requires sub-quadratic attention: archs whose layers are all (or
+# majority) windowed-local / recurrent run it; pure full-attention archs are
+# skipped (recorded in DESIGN.md §Arch-applicability).
+LONG_OK = frozenset(
+    {"gemma3-27b", "gemma2-27b", "h2o-danube-1.8b", "recurrentgemma-2b", "xlstm-350m"}
+)
+
+# EC-SGHMC chain count per arch on the single-pod (16x16) mesh, memory-bound:
+# chain axis is carved out of the data axis (chains * per_chain_data = 16).
+# Multi-pod runs additionally map chains over the pod axis.
+EC_CHAINS = {
+    "gemma3-27b": 2,
+    "gemma2-27b": 2,
+    "h2o-danube-1.8b": 4,
+    "qwen3-0.6b": 4,
+    "grok-1-314b": 1,  # 314B: one chain fills a pod; EC couples across pods
+    "olmoe-1b-7b": 4,
+    "whisper-base": 4,
+    "recurrentgemma-2b": 4,
+    "xlstm-350m": 4,
+    "qwen2-vl-7b": 2,
+}
+
+
+def cells(arch: str):
+    """The shape cells this arch runs (assignment grid minus documented skips)."""
+    out = []
+    for s in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+        if s == "long_500k" and arch not in LONG_OK:
+            continue
+        out.append(SHAPES[s])
+    return tuple(out)
+
+
+def all_cells():
+    return tuple((a, c) for a in ARCH_IDS for c in cells(a))

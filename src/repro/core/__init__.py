@@ -1,0 +1,66 @@
+"""The paper's primary contribution: SG-MCMC samplers with elastic coupling,
+as composable optax-style transforms over (possibly chain-stacked) pytrees.
+"""
+from .types import Sampler
+from .tree_util import (
+    apply_updates,
+    count_params,
+    global_norm,
+    tree_broadcast_axis0,
+    tree_cast,
+    tree_mean_axis0,
+    tree_random_normal,
+)
+from .schedules import as_schedule, constant, cosine, polynomial_decay, warmup_cosine
+from .sghmc import SGHMCState, sghmc
+from .sgld import SGLDState, sgld
+from .ec_sghmc import ECSGHMCState, ec_sghmc, resample_chain_from_center
+from .ec_sgld import ECSGLDState, ec_sgld
+from .async_sghmc import AsyncSGHMCState, async_sghmc
+from .easgd import EAMSGDState, EASGDState, ECMSGDState, eamsgd, easgd, ec_msgd
+from .potential import Potential, chainwise, flat_prior, gaussian_prior, make_potential
+from .preconditioner import rmsprop_preconditioner
+from .scale_adapted import ScaleAdaptedState, scale_adapted_sghmc
+from . import recipe
+
+__all__ = [
+    "Sampler",
+    "apply_updates",
+    "count_params",
+    "global_norm",
+    "tree_broadcast_axis0",
+    "tree_cast",
+    "tree_mean_axis0",
+    "tree_random_normal",
+    "as_schedule",
+    "constant",
+    "cosine",
+    "polynomial_decay",
+    "warmup_cosine",
+    "SGHMCState",
+    "sghmc",
+    "SGLDState",
+    "sgld",
+    "ECSGHMCState",
+    "ec_sghmc",
+    "resample_chain_from_center",
+    "ECSGLDState",
+    "ec_sgld",
+    "AsyncSGHMCState",
+    "async_sghmc",
+    "EASGDState",
+    "EAMSGDState",
+    "ECMSGDState",
+    "easgd",
+    "eamsgd",
+    "ec_msgd",
+    "Potential",
+    "chainwise",
+    "flat_prior",
+    "gaussian_prior",
+    "make_potential",
+    "rmsprop_preconditioner",
+    "ScaleAdaptedState",
+    "scale_adapted_sghmc",
+    "recipe",
+]

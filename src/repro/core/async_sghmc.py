@@ -1,0 +1,110 @@
+"""Naive asynchronous SGHMC — the paper's "approach I" baseline (§2).
+
+A parameter server holds a SINGLE chain (theta, p).  K workers each hold a
+stale snapshot thetã^k of the server parameters (pulled when they last
+pushed).  Every step, the workers whose round-robin phase matches
+``t mod s`` push a stochastic gradient computed at their stale snapshot and
+pull fresh parameters; the server averages the O arrived gradients and
+advances Eq. 4 with them:
+
+    ĝ_t = (1/O) sum_{k arrived} grad Ũ(thetã^k_t)      (staleness = s steps)
+
+With s=1 (and K arriving every step) this is synchronous-parallel SGHMC and
+keeps all guarantees; for s > 1 the stale gradients act as extra noise — the
+regime where the paper shows this scheme breaks down while EC-SGHMC holds up
+(Fig. 2 left, s=8).
+
+SPMD emulation notes (DESIGN.md §2): worker snapshots are a (K, ...)-stacked
+state; gradients must be evaluated at ``grad_targets(state, params)`` (the
+snapshots), NOT at the server params — exactly the information pattern of a
+real async parameter server.  Steps where no worker reports leave the server
+dynamics idle (identity update), matching a waiting server.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .schedules import as_schedule
+from .sghmc import _noise_scale
+from .tree_util import tree_random_normal
+from .types import Sampler
+
+
+class AsyncSGHMCState(NamedTuple):
+    momentum: any  # server-side p : (...)
+    snapshots: any  # worker-side thetã^k : (K, ...)
+    step: jnp.ndarray
+
+
+def async_sghmc(
+    step_size,
+    num_workers: int,
+    friction: float = 1.0,
+    mass: float = 1.0,
+    sync_every: int = 1,  # s : staleness / communication period
+    temperature: float = 1.0,
+    noise_convention: str = "eq4",
+) -> Sampler:
+    schedule = as_schedule(step_size)
+    minv = 1.0 / mass
+    s = int(sync_every)
+    K = int(num_workers)
+    # round-robin phases: worker k reports at steps t with t % s == k % s
+    phases = jnp.arange(K) % s
+
+    def init(params):
+        return AsyncSGHMCState(
+            momentum=jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            snapshots=jax.tree.map(
+                lambda p: jnp.broadcast_to(p[None].astype(jnp.float32), (K,) + p.shape),
+                params,
+            ),
+            step=jnp.zeros((), jnp.int32),
+        )
+
+    def grad_targets(state, params):
+        del params
+        return state.snapshots
+
+    def update(grads, state, params, rng):
+        """``grads`` have a leading worker axis K (evaluated at snapshots)."""
+        eps = schedule(state.step)
+        arrived = (state.step % s) == phases  # (K,) bool
+        n_arrived = jnp.sum(arrived.astype(jnp.float32))
+        any_arrived = n_arrived > 0
+
+        def avg(g):
+            w = arrived.astype(jnp.float32).reshape((K,) + (1,) * (g.ndim - 1))
+            return jnp.sum(w * g.astype(jnp.float32), axis=0) / jnp.maximum(n_arrived, 1.0)
+
+        ghat = jax.tree.map(avg, grads)
+
+        sigma = temperature**0.5 * _noise_scale(eps, friction, 0.0, noise_convention)
+        noise = tree_random_normal(rng, state.momentum, jnp.float32)
+
+        gate = any_arrived.astype(jnp.float32)  # idle server <=> identity step
+        updates = jax.tree.map(lambda p: gate * eps * minv * p, state.momentum)
+        new_momentum = jax.tree.map(
+            lambda p, g, n: p
+            + gate * (-eps * g - eps * friction * minv * p + sigma * n),
+            state.momentum,
+            ghat,
+            noise,
+        )
+        # arrived workers pull the post-update server params
+        new_params = jax.tree.map(lambda th, u: th.astype(jnp.float32) + u, params, updates)
+        new_snapshots = jax.tree.map(
+            lambda snap, th: jnp.where(
+                arrived.reshape((K,) + (1,) * (th.ndim)), th[None], snap
+            ),
+            state.snapshots,
+            new_params,
+        )
+        return updates, AsyncSGHMCState(
+            momentum=new_momentum, snapshots=new_snapshots, step=state.step + 1
+        )
+
+    return Sampler(init, update, grad_targets)

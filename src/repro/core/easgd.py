@@ -1,0 +1,163 @@
+"""EASGD family (Zhang et al. 2015) + the paper's §5 alternative.
+
+Three deterministic optimizers over K-stacked params:
+
+* ``easgd``      — plain elastic averaging SGD (no momentum);
+* ``eamsgd``     — EASGD with momentum as rewritten in the paper's Eq. (10):
+                   coupling force applied to the POSITION, center has no
+                   momentum (the paper argues this breaks the generalized
+                   coordinate/momentum interpretation);
+* ``ec_msgd``    — the paper's Eq. (9): the deterministic limit of EC-SGHMC
+                   (coupling through the momentum, center carries momentum).
+                   Unit tests verify bit-equality with
+                   ``ec_sghmc(temperature=0, noise_convention="eq6")`` under
+                   the §5 variable substitution.
+
+All three accept ``sync_every`` (s): Zhang et al. update the center and apply
+coupling terms only every s steps, dropping them in intermittent steps — we
+reproduce that literally for eamsgd/easgd; ec_msgd uses the EC stale-center
+semantics (consistent with EC-SGHMC).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .schedules import as_schedule
+from .tree_util import tree_mean_axis0
+from .types import Sampler
+
+
+class EASGDState(NamedTuple):
+    center: any
+    step: jnp.ndarray
+
+
+def easgd(step_size, alpha: float = 1.0, sync_every: int = 1) -> Sampler:
+    schedule = as_schedule(step_size)
+    s = int(sync_every)
+
+    def init(params):
+        return EASGDState(
+            center=tree_mean_axis0(jax.tree.map(lambda p: p.astype(jnp.float32), params)),
+            step=jnp.zeros((), jnp.int32),
+        )
+
+    def update(grads, state, params, rng=None):
+        eps = schedule(state.step)
+        couple = ((state.step % s) == 0).astype(jnp.float32)
+        updates = jax.tree.map(
+            lambda g, th, c: -eps * g.astype(jnp.float32)
+            - couple * eps * alpha * (th.astype(jnp.float32) - c[None]),
+            grads,
+            params,
+            state.center,
+        )
+        new_center = jax.tree.map(
+            lambda c, th: c
+            + couple * eps * alpha * (jnp.mean(th.astype(jnp.float32), 0) - c),
+            state.center,
+            params,
+        )
+        return updates, EASGDState(center=new_center, step=state.step + 1)
+
+    return Sampler(init, update)
+
+
+class EAMSGDState(NamedTuple):
+    velocity: any  # (K, ...)
+    center: any
+    step: jnp.ndarray
+
+
+def eamsgd(step_size, alpha: float = 1.0, xi: float = 0.1, sync_every: int = 1) -> Sampler:
+    """Paper Eq. (10) — momentum EASGD, coupling applied to positions."""
+    schedule = as_schedule(step_size)
+    s = int(sync_every)
+
+    def init(params):
+        return EAMSGDState(
+            velocity=jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            center=tree_mean_axis0(jax.tree.map(lambda p: p.astype(jnp.float32), params)),
+            step=jnp.zeros((), jnp.int32),
+        )
+
+    def update(grads, state, params, rng=None):
+        eps = schedule(state.step)
+        couple = ((state.step % s) == 0).astype(jnp.float32)
+        # theta_{t+1} = theta_t + v_t - eps*alpha*(theta_t - c_t)
+        updates = jax.tree.map(
+            lambda v, th, c: v
+            - couple * eps * alpha * (th.astype(jnp.float32) - c[None]),
+            state.velocity,
+            params,
+            state.center,
+        )
+        # c_{t+1} = c_t - eps*alpha*(1/K) sum_i (c_t - theta^i_t)
+        new_center = jax.tree.map(
+            lambda c, th: c
+            - couple * eps * alpha * (c - jnp.mean(th.astype(jnp.float32), 0)),
+            state.center,
+            params,
+        )
+        # v_{t+1} = v_t - eps*grad - xi*v_t
+        new_velocity = jax.tree.map(
+            lambda v, g: v - eps * g.astype(jnp.float32) - xi * v,
+            state.velocity,
+            grads,
+        )
+        return updates, EAMSGDState(new_velocity, new_center, state.step + 1)
+
+    return Sampler(init, update)
+
+
+class ECMSGDState(NamedTuple):
+    velocity: any  # v^i : (K, ...)
+    center: any  # c
+    center_velocity: any  # h
+    step: jnp.ndarray
+
+
+def ec_msgd(step_size, alpha: float = 1.0, xi: float = 0.1) -> Sampler:
+    """Paper Eq. (9) — the physics-respecting momentum-EASGD suggested by the
+    deterministic limit of EC-SGHMC (s=1 synchronous form)."""
+    schedule = as_schedule(step_size)
+
+    def init(params):
+        center = tree_mean_axis0(jax.tree.map(lambda p: p.astype(jnp.float32), params))
+        return ECMSGDState(
+            velocity=jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            center=center,
+            center_velocity=jax.tree.map(jnp.zeros_like, center),
+            step=jnp.zeros((), jnp.int32),
+        )
+
+    def update(grads, state, params, rng=None):
+        eps = schedule(state.step)
+        updates = jax.tree.map(lambda v: v, state.velocity)  # theta += v_t
+        new_center = jax.tree.map(lambda c, h: c + h, state.center, state.center_velocity)
+        # v_{t+1} = v_t - eps*grad - xi*v_t - eps*alpha*(theta - c)
+        new_velocity = jax.tree.map(
+            lambda v, g, th, c: v
+            - eps * g.astype(jnp.float32)
+            - xi * v
+            - eps * alpha * (th.astype(jnp.float32) - c[None]),
+            state.velocity,
+            grads,
+            params,
+            state.center,
+        )
+        # h_{t+1} = h_t - xi*h_t - eps*alpha*(1/K) sum_i (c - theta^i)
+        new_center_velocity = jax.tree.map(
+            lambda h, c, th: h - xi * h - eps * alpha * (c - jnp.mean(th.astype(jnp.float32), 0)),
+            state.center_velocity,
+            state.center,
+            params,
+        )
+        return updates, ECMSGDState(
+            new_velocity, new_center, new_center_velocity, state.step + 1
+        )
+
+    return Sampler(init, update)

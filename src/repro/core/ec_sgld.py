@@ -1,0 +1,108 @@
+"""Elastic coupling applied to SGLD — the paper notes (§3, last paragraph)
+that the coupling idea is independent of the base Hamiltonian and applies to
+any SG-MCMC variant; with first-order Langevin dynamics the center keeps a
+momentum r but chains are momentum-free:
+
+    theta^i_{t+1} = theta^i_t - eps [ grad Ũ(theta^i_t) + alpha (theta^i_t - c̃_t) ]
+                    + N(0, 2 eps)
+    c_{t+1}       = c_t + eps M^-1 r_t
+    r_{t+1}       = r_t - eps C M^-1 r_t - eps alpha (c_t - mean_thetã_t)
+                    + N(0, 2 eps^2 C)
+
+This is also the bridge to plain EASGD (paper §5): removing all noise and the
+center momentum recovers EASGD exactly.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .schedules import as_schedule
+from .tree_util import tree_mean_axis0, tree_random_normal
+from .types import Sampler
+
+
+class ECSGLDState(NamedTuple):
+    center: any
+    center_momentum: any
+    center_stale: any
+    mean_theta_stale: any
+    step: jnp.ndarray
+
+
+def ec_sgld(
+    step_size,
+    alpha: float = 1.0,
+    center_friction: float = 1.0,
+    mass: float = 1.0,
+    sync_every: int = 1,
+    temperature: float = 1.0,
+) -> Sampler:
+    schedule = as_schedule(step_size)
+    minv = 1.0 / mass
+    s = int(sync_every)
+
+    def init(params):
+        center = tree_mean_axis0(jax.tree.map(lambda p: p.astype(jnp.float32), params))
+        return ECSGLDState(
+            center=center,
+            center_momentum=jax.tree.map(jnp.zeros_like, center),
+            center_stale=center,
+            mean_theta_stale=center,
+            step=jnp.zeros((), jnp.int32),
+        )
+
+    def update(grads, state, params, rng):
+        eps = schedule(state.step)
+        k_t, k_r = jax.random.split(rng)
+        noise_t = tree_random_normal(k_t, grads, jnp.float32)
+        noise_r = tree_random_normal(k_r, state.center_momentum, jnp.float32)
+        sig_t = jnp.sqrt(2.0 * eps * temperature)
+        sig_r = temperature**0.5 * eps * jnp.sqrt(2.0 * center_friction)
+
+        updates = jax.tree.map(
+            lambda g, th, ct, n: -eps
+            * (g.astype(jnp.float32) + alpha * (th.astype(jnp.float32) - ct))
+            + sig_t * n,
+            grads,
+            params,
+            state.center_stale,
+            noise_t,
+        )
+        new_center = jax.tree.map(
+            lambda c, r: c + eps * minv * r, state.center, state.center_momentum
+        )
+        new_center_momentum = jax.tree.map(
+            lambda r, c, mth, n: r
+            - eps * center_friction * minv * r
+            - eps * alpha * (c - mth)
+            + sig_r * n,
+            state.center_momentum,
+            state.center,
+            state.mean_theta_stale,
+            noise_r,
+        )
+
+        def do_sync(operand):
+            new_c, upd = operand
+            new_params = jax.tree.map(lambda th, u: th.astype(jnp.float32) + u, params, upd)
+            return new_c, tree_mean_axis0(new_params)
+
+        def no_sync(operand):
+            del operand
+            return state.center_stale, state.mean_theta_stale
+
+        is_sync = (state.step + 1) % s == 0
+        new_stale, new_mth = jax.lax.cond(is_sync, do_sync, no_sync, (new_center, updates))
+
+        return updates, ECSGLDState(
+            center=new_center,
+            center_momentum=new_center_momentum,
+            center_stale=new_stale,
+            mean_theta_stale=new_mth,
+            step=state.step + 1,
+        )
+
+    return Sampler(init, update)

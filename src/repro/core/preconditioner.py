@@ -1,0 +1,38 @@
+"""Diagonal mass-matrix adaptation (RMSProp-style, à la scale-adapted SGHMC).
+
+Maintains m̂ = sqrt(E[g²]) per parameter and exposes M^{-1} as a pytree the
+samplers can consume in place of the scalar ``mass``.  Adaptation is frozen
+after ``burnin`` steps so the sampler targets a fixed (valid) Hamiltonian
+afterwards.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class PrecondState(NamedTuple):
+    v: any  # running E[g^2]
+    step: jnp.ndarray
+
+
+def rmsprop_preconditioner(decay: float = 0.99, eps: float = 1e-8, burnin: int = 1000):
+    def init(params):
+        return PrecondState(
+            v=jax.tree.map(lambda p: jnp.ones_like(p, jnp.float32), params),
+            step=jnp.zeros((), jnp.int32),
+        )
+
+    def update(state, grads):
+        adapt = (state.step < burnin).astype(jnp.float32)
+        new_v = jax.tree.map(
+            lambda v, g: v + adapt * (1 - decay) * (jnp.square(g.astype(jnp.float32)) - v),
+            state.v,
+            grads,
+        )
+        minv = jax.tree.map(lambda v: 1.0 / (jnp.sqrt(v) + eps), new_v)
+        return minv, PrecondState(v=new_v, step=state.step + 1)
+
+    return init, update

@@ -1,0 +1,46 @@
+"""Step-size schedules. A schedule is ``step -> epsilon`` (jnp scalar)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    def fn(step):
+        return jnp.asarray(value, jnp.float32)
+
+    return fn
+
+
+def polynomial_decay(a: float, b: float, gamma: float):
+    """epsilon_t = a * (b + t)^(-gamma) — the classic SG-MCMC decay
+    (Welling & Teh 2011 conditions: gamma in (0.5, 1])."""
+
+    def fn(step):
+        return jnp.asarray(a, jnp.float32) * (b + step.astype(jnp.float32)) ** (-gamma)
+
+    return fn
+
+
+def cosine(peak: float, total_steps: int, floor: float = 0.0):
+    def fn(step):
+        frac = jnp.clip(step.astype(jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+        return floor + 0.5 * (peak - floor) * (1.0 + jnp.cos(jnp.pi * frac))
+
+    return fn
+
+
+def warmup_cosine(peak: float, warmup_steps: int, total_steps: int, floor: float = 0.0):
+    def fn(step):
+        t = step.astype(jnp.float32)
+        warm = peak * t / max(warmup_steps, 1)
+        frac = jnp.clip((t - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(t < warmup_steps, warm, cos)
+
+    return fn
+
+
+def as_schedule(x):
+    if callable(x):
+        return x
+    return constant(float(x))

@@ -1,0 +1,41 @@
+"""Stochastic Gradient Langevin Dynamics (Welling & Teh, 2011).
+
+    theta_{t+1} = theta_t - eps * grad Ũ(theta_t) + N(0, 2 eps)
+
+First-order baseline; also the deterministic-limit bridge to EASGD without
+momentum noted in the paper's §5.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .schedules import as_schedule
+from .tree_util import tree_random_normal
+from .types import Sampler
+
+
+class SGLDState(NamedTuple):
+    step: jnp.ndarray
+
+
+def sgld(step_size, temperature: float = 1.0, preconditioner=None) -> Sampler:
+    schedule = as_schedule(step_size)
+
+    def init(params):
+        del params
+        return SGLDState(step=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params=None, rng=None):
+        del params
+        eps = schedule(state.step)
+        sigma = jnp.sqrt(2.0 * eps * temperature)
+        noise = tree_random_normal(rng, grads, jnp.float32)
+        updates = jax.tree.map(
+            lambda g, n: -eps * g.astype(jnp.float32) + sigma * n, grads, noise
+        )
+        return updates, SGLDState(step=state.step + 1)
+
+    return Sampler(init, update)

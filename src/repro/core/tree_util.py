@@ -1,0 +1,66 @@
+"""Pytree arithmetic helpers (no optax in this environment — pure JAX)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(s, a):
+    return jax.tree.map(lambda x: s * x, a)
+
+
+def tree_zeros_like(a, dtype=None):
+    return jax.tree.map(lambda x: jnp.zeros_like(x, dtype=dtype), a)
+
+
+def tree_dot(a, b):
+    leaves = jax.tree.leaves(
+        jax.tree.map(lambda x, y: jnp.vdot(x.astype(jnp.float32), y.astype(jnp.float32)), a, b)
+    )
+    return jnp.sum(jnp.stack(leaves)) if leaves else jnp.float32(0.0)
+
+
+def global_norm(a):
+    return jnp.sqrt(tree_dot(a, a))
+
+
+def tree_random_normal(rng, target, dtype=None):
+    """A normal sample per leaf of ``target`` (shape-matched), deterministic
+    in (rng, tree-structure)."""
+    leaves, treedef = jax.tree.flatten(target)
+    keys = jax.random.split(rng, len(leaves)) if leaves else []
+    samples = [
+        jax.random.normal(k, l.shape, dtype or l.dtype) for k, l in zip(keys, leaves)
+    ]
+    return jax.tree.unflatten(treedef, samples)
+
+
+def apply_updates(params, updates):
+    """params + updates, preserving param dtypes (updates may be f32)."""
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)).astype(p.dtype), params, updates)
+
+
+def tree_mean_axis0(a):
+    """Mean over the leading (chain) axis of every leaf."""
+    return jax.tree.map(lambda x: jnp.mean(x, axis=0), a)
+
+
+def tree_broadcast_axis0(a, k: int):
+    """Broadcast every leaf to a leading axis of size k."""
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (k,) + x.shape), a)
+
+
+def tree_cast(a, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), a)
+
+
+def count_params(a) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(a))

@@ -1,0 +1,41 @@
+"""Core type definitions for the SG-MCMC sampler library.
+
+Samplers follow an optax-style ``(init, update)`` transform API so they
+compose with any model and any distribution strategy:
+
+    sampler = ec_sghmc(step_size=1e-2, alpha=1.0, ...)
+    state   = sampler.init(params)
+    updates, state = sampler.update(grads, state, params, rng)
+    params  = apply_updates(params, updates)
+
+``grads`` are gradients of the potential energy U(θ) (i.e. the *negative*
+log posterior), matching the paper's convention: the sampler descends U.
+For elastically-coupled samplers, ``params``/``grads`` carry a leading
+chain axis of size K on every leaf.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+Params = Any  # pytree
+State = Any  # pytree
+Updates = Any  # pytree, same structure as Params
+
+
+class Sampler(NamedTuple):
+    """A stateful parameter-update transform (optax-compatible shape).
+
+    ``grad_targets`` (optional): (state, params) -> pytree at which the
+    caller must evaluate gradients before calling ``update``.  ``None``
+    means "at params".  Stale-gradient samplers (approach I) point this at
+    their worker snapshots.
+    """
+
+    init: Callable[[Params], State]
+    # update(grads, state, params, rng) -> (updates, new_state)
+    update: Callable[..., tuple[Updates, State]]
+    grad_targets: Callable[[State, Params], Params] | None = None
+
+
+class ScheduleFn:  # pragma: no cover - typing helper only
+    def __call__(self, step) -> Any: ...

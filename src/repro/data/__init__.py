@@ -1,0 +1,7 @@
+from .pipeline import ShardedLoader, chain_batches
+from .synthetic import (
+    synthetic_cifar10,
+    synthetic_mnist,
+    synthetic_token_stream,
+    token_batch,
+)

@@ -1,0 +1,2 @@
+from . import sharding
+from .sharding import build_spec, tree_shardings, tree_specs

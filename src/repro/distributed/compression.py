@@ -1,0 +1,40 @@
+"""Gradient/center-exchange compression for the EC sync collective.
+
+int8 with per-block scales (block = trailing 256 elements).  Soundness
+argument specific to this paper: the quantization error of the exchanged
+center/mean-theta is mathematically absorbed into the center-noise
+covariance C of Eq. 6 — EC-SGHMC is *designed* to tolerate a noisy center,
+so compressing its one collective is free robustness the naive approach
+does not enjoy (Async-SGHMC's stale gradients enter the dynamics directly).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+class Int8Codec(NamedTuple):
+    encode: callable
+    decode: callable
+    ratio: float  # wire-bytes ratio vs f32
+
+
+def int8_codec() -> Int8Codec:
+    def encode(x):
+        shape = x.shape
+        flat = x.astype(jnp.float32).reshape(-1)
+        pad = (-flat.size) % BLOCK
+        flat = jnp.pad(flat, (0, pad)).reshape(-1, BLOCK)
+        scale = jnp.max(jnp.abs(flat), axis=1, keepdims=True) / 127.0
+        q = jnp.round(flat / jnp.maximum(scale, 1e-12)).astype(jnp.int8)
+        return {"q": q, "scale": scale, "shape": shape, "n": x.size}
+
+    def decode(enc):
+        flat = enc["q"].astype(jnp.float32) * enc["scale"]
+        return flat.reshape(-1)[: enc["n"]].reshape(enc["shape"])
+
+    return Int8Codec(encode, decode, ratio=(1 + 4 / BLOCK) / 4)

@@ -1,0 +1,194 @@
+"""Logical-axis sharding: ParamSpec axes -> PartitionSpec via rule tables.
+
+A *rule table* maps logical axis names ("embed", "heads", "vocab", ...) to a
+mesh axis (or tuple of mesh axes).  ``build_spec`` resolves one tensor:
+mesh axes are granted in PRIORITY order (so e.g. "kv_heads" gets "model"
+before a sequence dim can claim it), each mesh axis is used at most once per
+tensor, and any assignment that does not divide the dim evenly is dropped
+(falls back to replication) — this is what makes one rule table work across
+all 10 architectures (whisper's 8 kv-heads simply refuse a 16-way axis).
+"""
+from __future__ import annotations
+
+from typing import Mapping, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+# resolution priority: parameter-ish dims first, then batch, then sequence
+_PRIORITY = (
+    "chain",
+    "expert",
+    "kv_heads",
+    "heads",
+    "vocab",
+    "mlp",
+    "mlp2",
+    "rnn",
+    "embed",
+    "batch",
+    "kvseq",
+    "seq",
+)
+
+
+def _axes_tuple(rule) -> tuple:
+    if rule is None:
+        return ()
+    return tuple(rule) if isinstance(rule, (tuple, list)) else (rule,)
+
+
+def build_spec(
+    shape: Sequence[int],
+    axes: Sequence[Optional[str]],
+    rules: Mapping[str, object],
+    mesh: jax.sharding.Mesh,
+) -> PartitionSpec:
+    assert len(shape) == len(axes), (shape, axes)
+    entries: list = [None] * len(shape)
+    used: set = set()
+    order = sorted(
+        range(len(axes)),
+        key=lambda i: _PRIORITY.index(axes[i]) if axes[i] in _PRIORITY else len(_PRIORITY),
+    )
+    for i in order:
+        name = axes[i]
+        if name is None or name not in rules:
+            continue
+        grant = []
+        size = 1
+        for mx in _axes_tuple(rules[name]):
+            if mx in used or mx not in mesh.shape:
+                continue
+            if shape[i] % (size * mesh.shape[mx]) != 0:
+                continue
+            grant.append(mx)
+            size *= mesh.shape[mx]
+        if grant:
+            entries[i] = tuple(grant) if len(grant) > 1 else grant[0]
+            used.update(grant)
+    return PartitionSpec(*entries)
+
+
+def tree_specs(axes_tree, shapes_tree, rules, mesh):
+    """PartitionSpec pytree for matching (axes, shapes) trees."""
+    return jax.tree.map(
+        lambda ax, sh: build_spec(sh.shape, ax, rules, mesh),
+        axes_tree,
+        shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x),
+    )
+
+
+def tree_shardings(axes_tree, shapes_tree, rules, mesh):
+    specs = tree_specs(axes_tree, shapes_tree, rules, mesh)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, PartitionSpec),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Rule tables
+# ---------------------------------------------------------------------------
+
+
+def train_param_rules(mesh, pure_dp: bool = False, fsdp: bool = True, style: str = "tp_fsdp"):
+    """Chain-stacked params.
+
+    styles:
+      tp_fsdp — TP over `model` + FSDP over `data` (megatron-style; baseline)
+      fsdp2d  — params sharded over (data, model) on the embed dim, NO tensor
+                parallelism: weights all-gather per layer, activations never
+                all-reduce (MaxText-style; activations shard batch over both
+                axes). The §Perf hillclimb winner for activation-AR-bound
+                cells.
+      dp      — pure data parallel (params replicated).
+    """
+    chain_axes = tuple(a for a in ("pod", "chain") if a in mesh.shape)
+    if pure_dp or style == "dp":
+        return {"chain": chain_axes}
+    if style == "fsdp2d":
+        return {"chain": chain_axes, "embed": ("data", "model")}
+    rules = {
+        "chain": chain_axes,
+        "vocab": "model",
+        "mlp": "model",
+        "mlp2": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "expert": "model",
+        "rnn": "model",
+    }
+    if fsdp:
+        rules["embed"] = "data"
+    return rules
+
+
+def center_rules(mesh, pure_dp: bool = False):
+    """Center variables (c, r, c̃, m̃θ) have no chain axis — they shard over
+    the ENTIRE mesh (chain/pod axes fold into the FSDP axis)."""
+    full_data = tuple(a for a in ("pod", "chain", "data") if a in mesh.shape)
+    if pure_dp:
+        return {"vocab": full_data, "embed": "model", "mlp": "model"}
+    return {
+        "vocab": "model",
+        "mlp": "model",
+        "mlp2": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "expert": "model",
+        "rnn": "model",
+        "embed": full_data,
+    }
+
+
+def serve_param_rules(mesh, fsdp: bool = False, pure_dp: bool = False, style: str = "tp_fsdp"):
+    if pure_dp or style == "dp":
+        return {}
+    if style == "fsdp2d":
+        # weights sharded across the whole mesh on the embed dim; gathered
+        # per layer at use; no tensor-parallel activation all-reduces.
+        return {"embed": tuple(a for a in ("pod", "data", "model") if a in mesh.shape)}
+    rules = {
+        "vocab": "model",
+        "mlp": "model",
+        "mlp2": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "expert": "model",
+        "rnn": "model",
+    }
+    if fsdp:
+        rules["embed"] = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return rules
+
+
+def batch_rules(mesh, pure_dp: bool = False, style: str = "tp_fsdp"):
+    chain_axes = tuple(a for a in ("pod", "chain") if a in mesh.shape)
+    # without tensor parallelism the model axis is free for batch rows
+    wide = pure_dp or style in ("fsdp2d", "dp")
+    data_axes = ("data", "model") if wide else ("data",)
+    return {
+        "chain": chain_axes,
+        "batch": data_axes,
+        # sequence dims pick up whatever is left (long_500k: B=1)
+        "kvseq": ("data", "model") if not wide else ("data",),
+        "seq": (),
+    }
+
+
+def serve_batch_rules(mesh):
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return {
+        "batch": data_axes,
+        "kv_heads": "model",
+        "heads": "model",
+        "rnn": "model",
+        "kvseq": data_axes + ("model",),  # claims leftovers (B=1 long-context)
+        "embed": (),
+        "vocab": "model",
+        "mlp": "model",
+    }

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the perf-critical layers (validated in
+interpret mode on CPU; compiled on real TPU):
+
+* fused_ecsghmc — one-pass Eq. 6 sampler update (memory-bound hot spot)
+* flash_attention — blocked attention w/ sliding-window block skipping
+* rglru — chunked linear-recurrence scan
+"""
+from .ops import flash_attention, fused_ec_update, fused_ec_update_tree, rglru_scan
+from . import ref

@@ -1,0 +1,120 @@
+"""jit'd dispatch wrappers for the Pallas kernels: shape guards, padding,
+platform selection (interpret=True on CPU — the kernel body runs in Python
+for validation; compiled on real TPU), and pytree-level entry points."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import flash_attention as _fa
+from . import fused_ecsghmc as _fe
+from . import rglru as _rg
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# --- fused EC-SGHMC ----------------------------------------------------------
+
+_LANES = _fe.LANES
+_ROWS = _fe.BLOCK_ROWS
+_TILE = _LANES * _ROWS
+
+
+def _pad_flat(x):
+    n = x.size
+    pad = (-n) % _TILE
+    flat = jnp.pad(x.reshape(-1), (0, pad))
+    return flat.reshape(-1, _LANES), n
+
+
+@functools.partial(jax.jit, static_argnames=("stochastic_round",))
+def fused_ec_update(
+    theta, p, g, c_tilde, key,
+    *, eps, friction, mass, alpha, sigma_p, stochastic_round=True,
+):
+    """Single-leaf fused Eq. 6 update. Returns (theta_new, p_new) in the
+    input dtypes.  Noise bits: jax.random on CPU-validation path; on-chip
+    PRNG on TPU (zero HBM noise traffic)."""
+    shape, dtype_t, dtype_p = theta.shape, theta.dtype, p.dtype
+    t2, n = _pad_flat(theta)
+    p2, _ = _pad_flat(p)
+    g2, _ = _pad_flat(g.astype(jnp.float32))
+    c2, _ = _pad_flat(jnp.broadcast_to(c_tilde, theta.shape))
+    onchip = _on_tpu()
+    if onchip:
+        bits1 = bits2 = jnp.zeros(t2.shape, jnp.uint32)  # unused on TPU
+    else:
+        k1, k2 = jax.random.split(key)
+        bits1 = jax.random.bits(k1, t2.shape, jnp.uint32)
+        bits2 = jax.random.bits(k2, t2.shape, jnp.uint32)
+    t_new, p_new = _fe.fused_ec_update_flat(
+        t2, p2, g2, c2, bits1, bits2,
+        eps=eps, friction=friction, mass=mass, alpha=alpha, sigma_p=sigma_p,
+        stochastic_round=stochastic_round, onchip_prng=onchip,
+        interpret=not onchip,
+    )
+    t_new = t_new.reshape(-1)[:n].reshape(shape).astype(dtype_t)
+    p_new = p_new.reshape(-1)[:n].reshape(shape).astype(dtype_p)
+    return t_new, p_new
+
+
+def fused_ec_update_tree(params, momentum, grads, center_stale, key, **hyper):
+    """Pytree-level fused update (one kernel launch per leaf)."""
+    leaves_t, treedef = jax.tree.flatten(params)
+    leaves_p = treedef.flatten_up_to(momentum)
+    leaves_g = treedef.flatten_up_to(grads)
+    leaves_c = treedef.flatten_up_to(center_stale)
+    keys = jax.random.split(key, len(leaves_t))
+    outs = [
+        fused_ec_update(t, p, g, c, k, **hyper)
+        for t, p, g, c, k in zip(leaves_t, leaves_p, leaves_g, leaves_c, keys)
+    ]
+    new_t = treedef.unflatten([o[0] for o in outs])
+    new_p = treedef.unflatten([o[1] for o in outs])
+    return new_t, new_p
+
+
+# --- flash attention ---------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "softcap", "scale", "block_q", "block_k")
+)
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None, scale=None,
+                    block_q=128, block_k=128):
+    """(B, Hq, S, d) x (B, Hkv, S, d)^2 -> (B, Hq, S, d). Pads d to 128."""
+    d = q.shape[-1]
+    pad_d = (-d) % 128
+    if pad_d:
+        padder = lambda x: jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, pad_d)))
+        q, k, v = padder(q), padder(k), padder(v)
+        # keep softmax scale defined by the ORIGINAL head dim
+        scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    out = _fa.flash_attention(
+        q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,
+        block_q=block_q, block_k=block_k, interpret=not _on_tpu(),
+    )
+    return out[..., :d] if pad_d else out
+
+
+# --- RG-LRU scan -------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "block_s"))
+def rglru_scan(a, x, h0=None, *, block_r=128, block_s=256):
+    B, S, R = a.shape
+    pad_r = (-R) % min(block_r, max(R, 1))
+    if pad_r:
+        a = jnp.pad(a, ((0, 0), (0, 0), (0, pad_r)))
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, pad_r)))
+        if h0 is not None:
+            h0 = jnp.pad(h0, ((0, 0), (0, pad_r)))
+    out = _rg.rglru_scan(
+        a, x, h0, block_r=block_r, block_s=block_s, interpret=not _on_tpu()
+    )
+    return out[..., :R] if pad_r else out

@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+# --- fused EC-SGHMC update -------------------------------------------------
+
+
+def _bits_to_unit(bits):
+    return (bits >> 8).astype(jnp.float32) * (1.0 / (1 << 24)) + (0.5 / (1 << 24))
+
+
+def box_muller(bits1, bits2):
+    u1 = _bits_to_unit(bits1)
+    u2 = _bits_to_unit(bits2)
+    return jnp.sqrt(-2.0 * jnp.log(u1)) * jnp.cos((2.0 * jnp.pi) * u2)
+
+
+def fused_ec_update(
+    theta, p, g, c_tilde, bits1, bits2, *, eps, friction, mass, alpha, sigma_p
+):
+    """Reference Eq. 6 chain update with Box-Muller noise from given bits.
+    Returns (theta_new_f32, p_new_f32) — round-to-nearest casting is applied
+    by callers; stochastic rounding is validated distributionally."""
+    minv = 1.0 / mass
+    t32, p32 = theta.astype(jnp.float32), p.astype(jnp.float32)
+    noise = box_muller(bits1, bits2)
+    theta_new = t32 + eps * minv * p32
+    p_new = (
+        (1.0 - eps * friction * minv) * p32
+        - eps * g.astype(jnp.float32)
+        - eps * alpha * (t32 - c_tilde.astype(jnp.float32))
+        + sigma_p * noise
+    )
+    return theta_new, p_new
+
+
+# --- flash attention ---------------------------------------------------------
+
+
+def attention(q, k, v, *, causal=True, window=None, softcap=None, scale=None):
+    """q: (B, Hq, S, d); k/v: (B, Hkv, S, d); GQA by head broadcast.
+    Full-materialization reference."""
+    B, Hq, S, d = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qr = q.reshape(B, Hkv, G, S, d).astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qr * scale, k.astype(jnp.float32))
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", w, v.astype(jnp.float32))
+    return out.reshape(B, Hq, S, d)
+
+
+# --- RG-LRU scan -------------------------------------------------------------
+
+
+def rglru_scan(a, x, h0=None):
+    """h_t = a_t * h_{t-1} + x_t over axis 1.  a, x: (B, S, R) f32."""
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a = a.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    if h0 is not None:
+        x = x.at[:, 0].add(a[:, 0] * h0)
+    _, h = jax.lax.associative_scan(combine, (a, x), axis=1)
+    return h

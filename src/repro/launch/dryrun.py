@@ -1,0 +1,221 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("REPRO_DRYRUN_XLA_FLAGS") or (
+    "--xla_force_host_platform_device_count="
+    + os.environ.get("REPRO_DRYRUN_DEVICES", "512")
+)
+
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# Multi-pod dry-run (deliverable e).
+#
+# For every (architecture x input-shape) cell, lower + compile the step
+# function against the production mesh(es) with abstract inputs (zero device
+# allocation), record:
+#   * memory_analysis()  — proves the cell fits per-device HBM,
+#   * cost_analysis()    — HLO FLOPs / bytes for the roofline,
+#   * collective bytes   — parsed from the post-SPMD optimized HLO,
+# and write one JSON artifact per cell under benchmarks/artifacts/dryrun/.
+#
+# Usage:
+#   python -m repro.launch.dryrun --arch gemma3-27b --shape train_4k --multi-pod
+#   python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro import configs
+from repro.launch import mesh as mesh_lib
+from repro.launch.specs import build_cell
+
+COLLECTIVE_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-device bytes moved by each collective family, from optimized HLO.
+
+    Operand shapes are parsed from each collective instruction's argument
+    list (post-partitioning => per-device shard shapes)."""
+    out: dict = {}
+    for line in hlo_text.splitlines():
+        m = COLLECTIVE_RE.search(line)
+        if not m or "=" not in line:
+            continue
+        kind = m.group(1)
+        # operand shapes: everything inside the call parens
+        call = line.split(m.group(1), 1)[1]
+        if "(" not in call:
+            continue
+        args = call[call.index("(") + 1 :]
+        depth = 1
+        for i, ch in enumerate(args):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                args = args[:i]
+                break
+        nbytes = sum(_shape_bytes(d, s) for d, s in SHAPE_RE.findall(args))
+        e = out.setdefault(kind, {"count": 0, "bytes": 0})
+        e["count"] += 1
+        e["bytes"] += nbytes
+    return out
+
+
+def _mesh_for(cell_kind: str, arch: str, multi_pod: bool, num_chains=None):
+    if cell_kind == "train":
+        k = num_chains if num_chains is not None else configs.EC_CHAINS[arch]
+        return mesh_lib.make_train_mesh(k, multi_pod=multi_pod)
+    return mesh_lib.make_production_mesh(multi_pod=multi_pod)
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    out_dir: Path | None = None,
+    num_chains=None,
+    sync_every: int = 4,
+    overrides: dict | None = None,
+    tag: str = "",
+    **cell_kw,
+) -> dict:
+    kind = configs.SHAPES[shape_name].kind
+    mesh = _mesh_for(kind, arch, multi_pod, num_chains)
+    t0 = time.time()
+    cell = build_cell(
+        arch, shape_name, mesh, num_chains=num_chains, sync_every=sync_every,
+        overrides=overrides, **cell_kw,
+    )
+    with mesh:
+        jitted = jax.jit(
+            cell.fn,
+            in_shardings=cell.in_shardings,
+            out_shardings=cell.out_shardings,
+            donate_argnums=cell.donate_argnums,
+        )
+        lowered = jitted.lower(*cell.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        try:
+            mem = compiled.memory_analysis()
+            mem_rec = {
+                k: int(getattr(mem, k))
+                for k in (
+                    "argument_size_in_bytes",
+                    "output_size_in_bytes",
+                    "temp_size_in_bytes",
+                    "generated_code_size_in_bytes",
+                    "alias_size_in_bytes",
+                )
+                if hasattr(mem, k)
+            }
+        except Exception as e:  # CPU backend may not implement it
+            mem_rec = {"error": str(e)}
+        cost = compiled.cost_analysis() or {}
+        cost_rec = {k: float(v) for k, v in cost.items() if isinstance(v, (int, float))}
+        hlo = compiled.as_text()
+        coll = parse_collectives(hlo)
+
+    n_dev = mesh.size
+    # per-device live bytes at step start: args (params+state+batch+cache)
+    arg_bytes = mem_rec.get("argument_size_in_bytes")
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": kind,
+        "mesh": {k: int(v) for k, v in mesh.shape.items()},
+        "devices": n_dev,
+        "multi_pod": multi_pod,
+        "num_chains": cell.num_chains,
+        "sync_every": sync_every,
+        "tag": tag,
+        "model_flops": cell.model_flops,
+        "meta": cell.meta,
+        "memory_analysis": mem_rec,
+        "cost_analysis": cost_rec,
+        "collectives": coll,
+        "collective_bytes_per_device": sum(v["bytes"] for v in coll.values()),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+    }
+    if out_dir is not None:
+        out_dir.mkdir(parents=True, exist_ok=True)
+        mesh_tag = "pod2" if multi_pod else "pod1"
+        suffix = f"__{tag}" if tag else ""
+        path = out_dir / f"{arch}__{shape_name}__{mesh_tag}{suffix}.json"
+        path.write_text(json.dumps(record, indent=1))
+    return record
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(configs.ARCH_IDS))
+    ap.add_argument("--shape", choices=list(configs.SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true", help="run every assigned cell")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--chains", type=int, default=None)
+    ap.add_argument("--sync-every", type=int, default=4)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="benchmarks/artifacts/dryrun")
+    args = ap.parse_args(argv)
+    out_dir = Path(args.out)
+
+    if args.all:
+        pods = [False, True] if args.both_meshes or not args.multi_pod else [True]
+        if args.both_meshes:
+            pods = [False, True]
+        todo = [(a, c.name, mp) for (a, c) in configs.all_cells() for mp in pods]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        todo = [(args.arch, args.shape, args.multi_pod)]
+
+    failures = []
+    for arch, shape, mp in todo:
+        label = f"{arch} x {shape} x {'2-pod(512)' if mp else '1-pod(256)'}"
+        try:
+            rec = run_cell(arch, shape, mp, out_dir, args.chains, args.sync_every, tag=args.tag)
+            print(
+                f"[ok] {label}: compile={rec['compile_s']}s "
+                f"flops/dev={rec['cost_analysis'].get('flops', float('nan')):.3e} "
+                f"coll_B/dev={rec['collective_bytes_per_device']:.3e} "
+                f"args/dev={rec['memory_analysis'].get('argument_size_in_bytes', -1)}",
+                flush=True,
+            )
+        except Exception as e:
+            failures.append((label, repr(e)))
+            print(f"[FAIL] {label}: {e!r}", flush=True)
+            traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} cell(s) FAILED:")
+        for l, e in failures:
+            print(f"  {l}: {e}")
+        sys.exit(1)
+    print(f"\nall {len(todo)} cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Production meshes.
+
+``make_production_mesh`` is the contract mesh for the dry-run: a 16x16
+single-pod (256 chips, TPU v5e) or 2x16x16 multi-pod (512 chips) device
+grid.  ``make_train_mesh`` derives the EC-SGHMC training mesh from the same
+device set by carving a ``chain`` axis out of the data axis (single-pod) —
+multi-pod keeps the ``pod`` axis, and chains map onto (pod, chain): the
+cross-pod link only carries the s-periodic elastic-coupling exchange, which
+is the paper's deployment story.
+
+Everything here is a FUNCTION (no module-level jax device state) so imports
+never lock the device count before dryrun.py sets XLA_FLAGS.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False, size: int = 16):
+    shape = (2, size, size) if multi_pod else (size, size)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_train_mesh(num_chains: int = 1, *, multi_pod: bool = False, size: int = 16,
+                    tp: int | None = None):
+    """Same devices as the production mesh, with a chain axis of size
+    ``num_chains`` factored out of the per-pod data axis.
+
+    ``tp`` re-balances the TP:DP ratio within the fixed chip count (the
+    §Perf lever for activation-allreduce-bound cells): the per-pod grid is
+    (chain, (size*size)/(chain*tp), tp) instead of (chain, size/chain, size).
+    """
+    chips = size * size
+    tp = size if tp is None else tp
+    assert chips % (num_chains * tp) == 0, (num_chains, tp)
+    data = chips // (num_chains * tp)
+    if multi_pod:
+        return jax.make_mesh((2, num_chains, data, tp), ("pod", "chain", "data", "model"))
+    return jax.make_mesh((num_chains, data, tp), ("chain", "data", "model"))
+
+
+def make_serve_mesh(*, multi_pod: bool = False, size: int = 16, tp: int | None = None):
+    """Production-mesh devices with a re-balanced (data, model) split for
+    serving hillclimbs; tp=None returns the contract production mesh."""
+    if tp is None:
+        return make_production_mesh(multi_pod=multi_pod, size=size)
+    chips = size * size
+    assert chips % tp == 0
+    shape = (2, chips // tp, tp) if multi_pod else (chips // tp, tp)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def total_chains(mesh, num_chains: int) -> int:
+    """Total K across pods (multi-pod meshes double the chain count)."""
+    return num_chains * mesh.shape.get("pod", 1)
+
+
+HARDWARE = {
+    # TPU v5e per-chip constants used by the roofline analysis
+    "peak_flops_bf16": 197e12,  # FLOP/s
+    "hbm_bw": 819e9,  # B/s
+    "ici_bw": 50e9,  # B/s per link
+}

@@ -1,0 +1,292 @@
+"""Cell assembly: (arch, shape, mesh) -> lowered-compilable step.
+
+``build_cell`` returns everything the dry-run, the launcher, and the
+roofline harness need: the step function, abstract (ShapeDtypeStruct)
+inputs — zero device allocation — matching in/out shardings, donation
+indices, and analytic MODEL_FLOPS for the roofline's useful-compute ratio.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro import configs
+from repro.core import ec_sghmc, sghmc
+from repro.distributed import sharding as shd
+from repro.models import abstract_params, active_params, get_model, param_axes
+from repro.serve.loop import make_decode_step, make_prefill_step
+from repro.train.step import make_train_step
+
+# archs whose dims divide the model axis poorly — run them data-parallel
+PURE_DP = frozenset({"whisper-base", "xlstm-350m"})
+# archs needing FSDP at serve time (params too big for TP-only)
+SERVE_FSDP = frozenset({"grok-1-314b", "gemma3-27b", "gemma2-27b", "qwen2-vl-7b"})
+N_DATA = 1_000_000_000  # representative corpus size for the N/|B| NLL scale
+VLM_PATCHES = 64
+
+
+def vlm_patches(seq_len: int) -> int:
+    """Patch-prefix length; bounded so tiny smoke shapes keep text tokens."""
+    return min(VLM_PATCHES, seq_len // 2)
+
+
+class Cell(NamedTuple):
+    arch: str
+    shape: str
+    kind: str  # train | prefill | decode
+    fn: Callable
+    args: tuple  # abstract args
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple
+    static_argnums: tuple
+    model_flops: float  # analytic useful FLOPs per step (6ND / 2ND)
+    num_chains: int
+    meta: dict
+
+
+def _stack(tree, k: int):
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct((k,) + s.shape, s.dtype), tree)
+
+
+def _stack_axes(tree):
+    is_ax = lambda x: isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x)
+    return jax.tree.map(lambda ax: ("chain",) + ax, tree, is_leaf=is_ax)
+
+
+def _shardings(axes_tree, shapes_tree, rules, mesh):
+    return shd.tree_shardings(axes_tree, shapes_tree, rules, mesh)
+
+
+def _key_abstract():
+    return jax.eval_shape(lambda: jax.random.key(0))
+
+
+def _replicated(mesh, tree):
+    return jax.tree.map(lambda _: NamedSharding(mesh, PartitionSpec()), tree)
+
+
+def _train_batch(cfg, k: int, per_chain_batch: int, seq: int):
+    """(abstract batch, axes tree) with leading chain axis."""
+    i32 = jnp.int32
+    B, S = per_chain_batch, seq
+    sds = jax.ShapeDtypeStruct
+    if cfg.family == "vlm":
+        n_patch = vlm_patches(S)
+        n_text = S - n_patch
+        batch = {
+            "tokens": sds((k, B, n_text), i32),
+            "labels": sds((k, B, n_text), i32),
+            "patch_embeds": sds((k, B, n_patch, cfg.d_model), cfg.compute_dtype),
+            "positions": sds((k, 3, B, S), i32),
+        }
+        axes = {
+            "tokens": ("chain", "batch", "seq"),
+            "labels": ("chain", "batch", "seq"),
+            "patch_embeds": ("chain", "batch", "seq", None),
+            "positions": ("chain", None, "batch", "seq"),
+        }
+    elif cfg.family == "audio":
+        batch = {
+            "tokens": sds((k, B, S), i32),
+            "labels": sds((k, B, S), i32),
+            "frame_embeds": sds((k, B, cfg.enc_seq, cfg.d_model), cfg.compute_dtype),
+        }
+        axes = {
+            "tokens": ("chain", "batch", "seq"),
+            "labels": ("chain", "batch", "seq"),
+            "frame_embeds": ("chain", "batch", "seq", None),
+        }
+    else:
+        batch = {"tokens": sds((k, B, S), i32), "labels": sds((k, B, S), i32)}
+        axes = {"tokens": ("chain", "batch", "seq"), "labels": ("chain", "batch", "seq")}
+    return batch, axes
+
+
+def _serve_batch(cfg, batch_size: int, seq: int, prefill: bool):
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    B, S = batch_size, seq
+    if prefill:
+        if cfg.family == "vlm":
+            n_patch = vlm_patches(S)
+            n_text = S - n_patch
+            return (
+                {
+                    "tokens": sds((B, n_text), i32),
+                    "labels": sds((B, n_text), i32),
+                    "patch_embeds": sds((B, n_patch, cfg.d_model), cfg.compute_dtype),
+                    "positions": sds((3, B, S), i32),
+                },
+                {
+                    "tokens": ("batch", "seq"),
+                    "labels": ("batch", "seq"),
+                    "patch_embeds": ("batch", "seq", None),
+                    "positions": (None, "batch", "seq"),
+                },
+            )
+        if cfg.family == "audio":
+            return (
+                {
+                    "tokens": sds((B, S), i32),
+                    "frame_embeds": sds((B, cfg.enc_seq, cfg.d_model), cfg.compute_dtype),
+                },
+                {"tokens": ("batch", "seq"), "frame_embeds": ("batch", "seq", None)},
+            )
+        return (
+            {"tokens": sds((B, S), i32)},
+            {"tokens": ("batch", "seq")},
+        )
+    return {"tokens": sds((B, 1), i32)}, {"tokens": ("batch", None)}
+
+
+def default_sampler(
+    cfg, arch: str, num_chains: int, sync_every: int = 4, fused: bool = False,
+    compress_sync: bool = False,
+):
+    """The paper's sampler wired for this arch (state dtype tracks params)."""
+    state_dtype = cfg.param_dtype
+    if num_chains > 1:
+        compression = None
+        if compress_sync:
+            from repro.distributed.compression import int8_codec
+
+            compression = int8_codec()
+        return ec_sghmc(
+            step_size=1e-5,
+            alpha=1.0,
+            friction=1.0,
+            center_friction=1.0,
+            sync_every=sync_every,
+            state_dtype=state_dtype,
+            fused=fused,
+            compression=compression,
+        )
+    return sghmc(step_size=1e-5, friction=1.0, state_dtype=state_dtype)
+
+
+def build_cell(
+    arch: str,
+    shape_name: str,
+    mesh,
+    *,
+    smoke: bool = False,
+    num_chains: int | None = None,
+    sync_every: int = 4,
+    overrides: dict | None = None,
+    fsdp: bool = True,
+    serve_fsdp: bool | None = None,
+    compress_sync: bool = False,
+    shard_style: str = "tp_fsdp",
+) -> Cell:
+    cfg = configs.get_config(arch, smoke=smoke)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    cell = configs.SHAPES[shape_name]
+    model = get_model(cfg)
+    pure_dp = arch in PURE_DP
+    specs = model.param_specs(cfg)
+    p_abs = abstract_params(specs)
+    p_axes = param_axes(specs)
+    n_active = active_params(cfg)
+
+    pods = mesh.shape.get("pod", 1)
+    if cell.kind == "train":
+        k = num_chains if num_chains is not None else configs.EC_CHAINS[arch] * pods
+        k = max(k, 1)
+        sampler = default_sampler(cfg, arch, k, sync_every, compress_sync=compress_sync)
+        step = make_train_step(cfg, model, sampler, n_data=N_DATA)
+        params_abs = _stack(p_abs, k)
+        params_axes = _stack_axes(p_axes)
+        state_abs = jax.eval_shape(sampler.init, params_abs)
+        per_chain_b = max(cell.global_batch // k, 1)
+        batch_abs, batch_axes = _train_batch(cfg, k, per_chain_b, cell.seq_len)
+
+        prm_rules = shd.train_param_rules(mesh, pure_dp, fsdp=fsdp, style=shard_style)
+        ctr_rules = shd.center_rules(mesh, pure_dp)
+        bat_rules = shd.batch_rules(mesh, pure_dp, style=shard_style)
+        params_shard = _shardings(params_axes, params_abs, prm_rules, mesh)
+        if hasattr(state_abs, "center"):  # ECSGHMCState
+            state_shard = type(state_abs)(
+                momentum=_shardings(params_axes, state_abs.momentum, prm_rules, mesh),
+                center=_shardings(p_axes, state_abs.center, ctr_rules, mesh),
+                center_momentum=_shardings(p_axes, state_abs.center_momentum, ctr_rules, mesh),
+                center_stale=_shardings(p_axes, state_abs.center_stale, ctr_rules, mesh),
+                mean_theta_stale=_shardings(p_axes, state_abs.mean_theta_stale, ctr_rules, mesh),
+                step=NamedSharding(mesh, PartitionSpec()),
+            )
+        else:  # SGHMCState
+            state_shard = type(state_abs)(
+                momentum=_shardings(params_axes, state_abs.momentum, prm_rules, mesh),
+                step=NamedSharding(mesh, PartitionSpec()),
+            )
+        batch_shard = _shardings(batch_axes, batch_abs, bat_rules, mesh)
+        key_abs = _key_abstract()
+        tokens = cell.global_batch * cell.seq_len
+        return Cell(
+            arch,
+            shape_name,
+            "train",
+            step,
+            (params_abs, state_abs, batch_abs, key_abs),
+            (params_shard, state_shard, batch_shard, NamedSharding(mesh, PartitionSpec())),
+            (params_shard, state_shard, _replicated(mesh, {"potential": 0, "nll_per_token": 0})),
+            (0, 1),
+            (),
+            6.0 * n_active * tokens,
+            k,
+            {"tokens_per_step": tokens, "n_active": n_active},
+        )
+
+    # ---- serving cells ----------------------------------------------------
+    use_serve_fsdp = (arch in SERVE_FSDP) if serve_fsdp is None else serve_fsdp
+    srv_rules = shd.serve_param_rules(mesh, fsdp=use_serve_fsdp, pure_dp=pure_dp, style=shard_style)
+    bat_rules = shd.serve_batch_rules(mesh)
+    params_shard = _shardings(p_axes, p_abs, srv_rules, mesh)
+
+    if cell.kind == "prefill":
+        step = make_prefill_step(cfg, model, max_seq=cell.seq_len, cache_dtype=cfg.compute_dtype)
+        batch_abs, batch_axes = _serve_batch(cfg, cell.global_batch, cell.seq_len, True)
+        batch_shard = _shardings(batch_axes, batch_abs, bat_rules, mesh)
+        tokens = cell.global_batch * cell.seq_len
+        return Cell(
+            arch,
+            shape_name,
+            "prefill",
+            step,
+            (p_abs, batch_abs),
+            (params_shard, batch_shard),
+            None,
+            (),
+            (),
+            2.0 * n_active * tokens,
+            1,
+            {"tokens_per_step": tokens, "n_active": n_active},
+        )
+
+    # decode (decode_32k / long_500k): one new token against a seq_len cache
+    step = make_decode_step(cfg, model)
+    cache_abs = model.make_cache(cfg, cell.global_batch, cell.seq_len, cfg.compute_dtype, abstract=True)
+    cache_ax = model.cache_axes(cfg)
+    cache_shard = _shardings(cache_ax, cache_abs, bat_rules, mesh)
+    tok_abs, tok_axes = _serve_batch(cfg, cell.global_batch, cell.seq_len, False)
+    tok_shard = _shardings(tok_axes, tok_abs, bat_rules, mesh)
+    return Cell(
+        arch,
+        shape_name,
+        "decode",
+        step,
+        (p_abs, cache_abs, tok_abs["tokens"]),
+        (params_shard, cache_shard, tok_shard["tokens"]),
+        (tok_shard["tokens"], cache_shard),
+        (1,),
+        (),
+        2.0 * n_active * cell.global_batch,
+        1,
+        {"tokens_per_step": cell.global_batch, "n_active": n_active},
+    )

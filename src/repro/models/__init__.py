@@ -1,0 +1,13 @@
+from . import encdec, layers, mlp, moe, recurrent, registry, resnet, transformer
+from .common import (
+    LayerKind,
+    ModelConfig,
+    ParamSpec,
+    abstract_params,
+    active_params,
+    cast_specs,
+    init_params,
+    num_params,
+    param_axes,
+)
+from .registry import ModelDef, get_model

@@ -1,0 +1,34 @@
+"""The paper's MNIST experiment model: 2-layer fully-connected network,
+800 units per layer, ReLU activations (Fig. 2 left)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamSpec
+
+
+def param_specs(in_dim: int = 784, hidden: int = 800, out_dim: int = 10):
+    return {
+        "w1": ParamSpec((in_dim, hidden), ("embed", "mlp")),
+        "b1": ParamSpec((hidden,), ("mlp",), init="zeros"),
+        "w2": ParamSpec((hidden, hidden), ("mlp", "mlp2")),
+        "b2": ParamSpec((hidden,), ("mlp2",), init="zeros"),
+        "w3": ParamSpec((hidden, out_dim), ("mlp2", None)),
+        "b3": ParamSpec((out_dim,), (None,), init="zeros"),
+    }
+
+
+def apply(params, x):
+    """x: (B, in_dim) -> logits (B, out_dim)."""
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    h = jax.nn.relu(h @ params["w2"] + params["b2"])
+    return h @ params["w3"] + params["b3"]
+
+
+def nll_fn(params, batch):
+    """(sum_nll, batch_size) for the classification posterior (Eq. 7/8)."""
+    logits = apply(params, batch["x"])
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logp, batch["y"][:, None], axis=-1)[:, 0]
+    return -jnp.sum(gold), jnp.asarray(batch["y"].shape[0], jnp.float32)

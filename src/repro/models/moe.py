@@ -1,0 +1,68 @@
+"""Mixture-of-Experts layer (grok-1: 8e top-2, olmoe: 64e top-8).
+
+TPU-native dense-dispatch formulation (einsum + capacity, MaxText-style):
+tokens are grouped (group size g) so the dispatch einsums stay a small
+fraction of expert-FFN FLOPs; experts shard over the `expert` logical axis
+(EP).  Capacity overflow drops tokens (residual passes through), standard
+for TPU MoE.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, ParamSpec
+from .layers import _ACTS
+
+GROUP = 512  # tokens per dispatch group
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    D, F, E, pd = cfg.d_model, cfg.moe_d_ff, cfg.moe_num_experts, cfg.param_dtype
+    return {
+        "router": ParamSpec((D, E), ("embed", None), dtype=pd),
+        "w_gate": ParamSpec((E, D, F), ("expert", "embed", "mlp"), dtype=pd),
+        "w_up": ParamSpec((E, D, F), ("expert", "embed", "mlp"), dtype=pd),
+        "w_down": ParamSpec((E, F, D), ("expert", "mlp", "embed"), dtype=pd),
+    }
+
+
+def _capacity(cfg: ModelConfig, g: int) -> int:
+    cap = int(g * cfg.moe_top_k * cfg.capacity_factor / cfg.moe_num_experts)
+    return max(cap, cfg.moe_top_k)
+
+
+def moe_ffn(cfg: ModelConfig, p, x):
+    """x: (B, S, D) -> (B, S, D)."""
+    cd = cfg.compute_dtype
+    B, S, D = x.shape
+    E, K = cfg.moe_num_experts, cfg.moe_top_k
+    g = min(GROUP, S)
+    n_groups = (B * S) // g
+    xg = x.reshape(n_groups, g, D)
+    C = _capacity(cfg, g)
+
+    logits = jnp.einsum("ngd,de->nge", xg.astype(cd), p["router"].astype(cd))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)  # (n,g,E)
+    gate_vals, idx = jax.lax.top_k(probs, K)  # (n,g,K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)  # (n,g,K,E)
+    flat = onehot.reshape(n_groups, g * K, E)  # token-major priority
+    pos = jnp.cumsum(flat, axis=1) - flat  # (n,g*K,E): slot index per entry
+    pos = pos.reshape(n_groups, g, K, E)
+    keep = (pos < C).astype(jnp.float32) * onehot
+    slot_oh = jax.nn.one_hot(
+        jnp.sum(pos * onehot, axis=-1).astype(jnp.int32), C, dtype=jnp.float32
+    )  # (n,g,K,C)
+    # dispatch: (n, g, E, C); combine adds the gate weights
+    dispatch = jnp.einsum("ngke,ngkc->ngec", keep, slot_oh)
+    combine = jnp.einsum("ngke,ngkc,ngk->ngec", keep, slot_oh, gate_vals)
+
+    xe = jnp.einsum("ngec,ngd->necd", dispatch.astype(cd), xg.astype(cd))  # (n,E,C,D)
+    act = _ACTS[cfg.act]
+    h = act(jnp.einsum("necd,edf->necf", xe, p["w_gate"].astype(cd)))
+    h = h * jnp.einsum("necd,edf->necf", xe, p["w_up"].astype(cd))
+    ye = jnp.einsum("necf,efd->necd", h, p["w_down"].astype(cd))  # (n,E,C,D)
+    y = jnp.einsum("ngec,necd->ngd", combine.astype(cd), ye)
+    return y.reshape(B, S, D)

@@ -1,0 +1,313 @@
+"""Recurrent temporal-mixing blocks: RG-LRU (RecurrentGemma/Griffin) and
+mLSTM / sLSTM (xLSTM).
+
+Training uses parallel forms where they exist (associative scan for RG-LRU,
+stabilized quadratic parallel form for mLSTM) and lax.scan for sLSTM (true
+memory-mixing recurrence).  Decode is O(1)/token via explicit recurrent
+state — which is why these families run the long_500k cell.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, ParamSpec
+
+# ---------------------------------------------------------------------------
+# RG-LRU block (Griffin recurrent block: conv + gated linear recurrence)
+# ---------------------------------------------------------------------------
+
+_RGLRU_C = 8.0
+
+
+def rglru_specs(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    R = cfg.rnn_width or cfg.d_model
+    W = cfg.rglru_conv_width
+    pd = cfg.param_dtype
+    return {
+        "w_x": ParamSpec((D, R), ("embed", "rnn"), dtype=pd),  # recurrent branch in
+        "w_gate_branch": ParamSpec((D, R), ("embed", "rnn"), dtype=pd),
+        "conv_w": ParamSpec((W, R), (None, "rnn"), scale=0.1, dtype=pd),
+        "conv_b": ParamSpec((R,), ("rnn",), init="zeros", dtype=pd),
+        "w_a": ParamSpec((R, R), ("rnn", None), dtype=pd),  # recurrence gate
+        "b_a": ParamSpec((R,), ("rnn",), init="zeros", dtype=pd),
+        "w_i": ParamSpec((R, R), ("rnn", None), dtype=pd),  # input gate
+        "b_i": ParamSpec((R,), ("rnn",), init="zeros", dtype=pd),
+        "lam": ParamSpec((R,), ("rnn",), init="lru_lambda", dtype=jnp.float32),
+        "w_out": ParamSpec((R, D), ("rnn", "embed"), dtype=pd),
+    }
+
+
+def _rglru_gates(p, u):
+    """u: (..., R) conv output. Returns (a, gated_input) in f32."""
+    r_gate = jax.nn.sigmoid(u @ p["w_a"].astype(u.dtype) + p["b_a"].astype(u.dtype))
+    i_gate = jax.nn.sigmoid(u @ p["w_i"].astype(u.dtype) + p["b_i"].astype(u.dtype))
+    log_a = -_RGLRU_C * jax.nn.softplus(p["lam"]) * r_gate.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    scale = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    x_in = scale * (i_gate.astype(jnp.float32) * u.astype(jnp.float32))
+    return a, x_in
+
+
+def rglru_block(cfg: ModelConfig, p, x):
+    """Training/prefill: x (B,S,D) -> (B,S,D) via associative scan."""
+    cd = cfg.compute_dtype
+    B, S, D = x.shape
+    gate = jax.nn.gelu(x.astype(cd) @ p["w_gate_branch"].astype(cd))
+    u = x.astype(cd) @ p["w_x"].astype(cd)  # (B,S,R)
+    W = p["conv_w"].shape[0]  # causal depthwise conv, width W
+    pad = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    u = sum(
+        pad[:, i : i + S, :] * p["conv_w"][i].astype(cd) for i in range(W)
+    ) + p["conv_b"].astype(cd)
+    a, x_in = _rglru_gates(p, u)  # f32 (B,S,R)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, x_in), axis=1)
+    out = (gate * h.astype(cd)) @ p["w_out"].astype(cd)
+    return out
+
+
+def rglru_init_state(cfg: ModelConfig, batch: int, dtype):
+    R = cfg.rnn_width or cfg.d_model
+    W = cfg.rglru_conv_width
+    return {
+        "h": jnp.zeros((batch, R), jnp.float32),
+        "conv": jnp.zeros((batch, W - 1, R), dtype),
+    }
+
+
+def rglru_state_specs(cfg: ModelConfig, batch: int, dtype):
+    R = cfg.rnn_width or cfg.d_model
+    W = cfg.rglru_conv_width
+    return {
+        "h": jax.ShapeDtypeStruct((batch, R), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, W - 1, R), dtype),
+    }
+
+
+def rglru_decode(cfg: ModelConfig, p, x, state):
+    """x: (B,1,D); O(1) recurrent step."""
+    cd = cfg.compute_dtype
+    xt = x[:, 0].astype(cd)
+    gate = jax.nn.gelu(xt @ p["w_gate_branch"].astype(cd))
+    u = xt @ p["w_x"].astype(cd)  # (B,R)
+    hist = jnp.concatenate([state["conv"].astype(cd), u[:, None]], axis=1)  # (B,W,R)
+    u = jnp.einsum("bwr,wr->br", hist, p["conv_w"].astype(cd)) + p["conv_b"].astype(cd)
+    a, x_in = _rglru_gates(p, u)
+    h = a * state["h"] + x_in  # f32
+    out = (gate * h.astype(cd)) @ p["w_out"].astype(cd)
+    return out[:, None], {"h": h, "conv": hist[:, 1:].astype(state["conv"].dtype)}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix-memory block, parallel stabilized form)
+#
+# The block operates in the up-projected space: up = 2*d_model split into
+# cfg.num_heads heads of dh_in = up // num_heads each.
+# ---------------------------------------------------------------------------
+
+
+def _mlstm_dims(cfg: ModelConfig):
+    up = 2 * cfg.d_model
+    NH = cfg.num_heads
+    return up, NH, up // NH
+
+
+def mlstm_specs(cfg: ModelConfig) -> dict:
+    D, pd = cfg.d_model, cfg.param_dtype
+    up, NH, dh = _mlstm_dims(cfg)
+    return {
+        "w_up1": ParamSpec((D, up), ("embed", "mlp"), dtype=pd),  # mixer path
+        "w_up2": ParamSpec((D, up), ("embed", "mlp"), dtype=pd),  # gate path
+        "conv_w": ParamSpec((4, up), (None, "mlp"), scale=0.1, dtype=pd),
+        "conv_b": ParamSpec((up,), ("mlp",), init="zeros", dtype=pd),
+        "wq": ParamSpec((up, NH, dh), ("mlp", "heads", None), dtype=pd),
+        "wk": ParamSpec((up, NH, dh), ("mlp", "heads", None), dtype=pd),
+        "wv": ParamSpec((up, NH, dh), ("mlp", "heads", None), dtype=pd),
+        "w_igate": ParamSpec((up, NH), ("mlp", "heads"), scale=0.01, dtype=pd),
+        "b_igate": ParamSpec((NH,), ("heads",), init="zeros", dtype=pd),
+        "w_fgate": ParamSpec((up, NH), ("mlp", "heads"), scale=0.01, dtype=pd),
+        "b_fgate": ParamSpec((NH,), ("heads",), init="ones", dtype=pd),
+        "w_down": ParamSpec((up, D), ("mlp", "embed"), dtype=pd),
+    }
+
+
+def mlstm_block(cfg: ModelConfig, p, x):
+    """Parallel stabilized mLSTM: O(S^2) train form (decode is O(1))."""
+    cd = cfg.compute_dtype
+    B, S, D = x.shape
+    up, NH, dh = _mlstm_dims(cfg)
+    u1 = x.astype(cd) @ p["w_up1"].astype(cd)  # (B,S,up) mixer path
+    u2 = jax.nn.silu(x.astype(cd) @ p["w_up2"].astype(cd))  # gate path
+    W = p["conv_w"].shape[0]
+    pad = jnp.pad(u1, ((0, 0), (W - 1, 0), (0, 0)))
+    conv = sum(pad[:, i : i + S, :] * p["conv_w"][i].astype(cd) for i in range(W))
+    conv = jax.nn.silu(conv + p["conv_b"].astype(cd))
+    q = jnp.einsum("bsu,uhk->bshk", conv, p["wq"].astype(cd))
+    k = jnp.einsum("bsu,uhk->bshk", conv, p["wk"].astype(cd))
+    v = jnp.einsum("bsu,uhk->bshk", u1, p["wv"].astype(cd))
+    f32 = jnp.float32
+    igate = jnp.einsum("bsu,uh->bsh", conv.astype(f32), p["w_igate"].astype(f32)) + p["b_igate"]
+    fgate = jnp.einsum("bsu,uh->bsh", conv.astype(f32), p["w_fgate"].astype(f32)) + p["b_fgate"]
+
+    logf = jax.nn.log_sigmoid(fgate)  # (B,S,NH)
+    F = jnp.cumsum(logf, axis=1)
+    # D_ts = F_t - F_s + i_s for s <= t
+    dmat = F[:, :, None, :] - F[:, None, :, :] + igate[:, None, :, :]  # (B,t,s,NH)
+    causal = jnp.tril(jnp.ones((S, S), bool))
+    dmat = jnp.where(causal[None, :, :, None], dmat, -jnp.inf)
+    m = jnp.max(dmat, axis=2, keepdims=True)  # (B,t,1,NH) stabilizer
+    dexp = jnp.exp(dmat - m)
+    scores = jnp.einsum("bthk,bshk->btsh", q.astype(f32), k.astype(f32))
+    scores = scores / math.sqrt(dh) * dexp
+    norm = jnp.maximum(jnp.abs(jnp.sum(scores, axis=2)), jnp.exp(-m[:, :, 0]))  # (B,t,NH)
+    h = jnp.einsum("btsh,bshk->bthk", scores, v.astype(f32)) / norm[..., None]
+    h = h.reshape(B, S, up).astype(cd)
+    return (h * u2) @ p["w_down"].astype(cd)
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int, dtype):
+    up, NH, dh = _mlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, NH, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, NH, dh), jnp.float32),
+        "m": jnp.full((batch, NH), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, 3, up), dtype),
+    }
+
+
+def mlstm_state_specs(cfg: ModelConfig, batch: int, dtype):
+    up, NH, dh = _mlstm_dims(cfg)
+    return {
+        "C": jax.ShapeDtypeStruct((batch, NH, dh, dh), jnp.float32),
+        "n": jax.ShapeDtypeStruct((batch, NH, dh), jnp.float32),
+        "m": jax.ShapeDtypeStruct((batch, NH), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, 3, up), dtype),
+    }
+
+
+def mlstm_decode(cfg: ModelConfig, p, x, state):
+    cd = cfg.compute_dtype
+    B = x.shape[0]
+    up, NH, dh = _mlstm_dims(cfg)
+    f32 = jnp.float32
+    xt = x[:, 0].astype(cd)
+    u1 = xt @ p["w_up1"].astype(cd)
+    u2 = jax.nn.silu(xt @ p["w_up2"].astype(cd))
+    hist = jnp.concatenate([state["conv"].astype(cd), u1[:, None]], axis=1)  # (B,4,up)
+    conv = jax.nn.silu(
+        jnp.einsum("bwu,wu->bu", hist, p["conv_w"].astype(cd)) + p["conv_b"].astype(cd)
+    )
+    q = jnp.einsum("bu,uhk->bhk", conv, p["wq"].astype(cd)).astype(f32)
+    k = jnp.einsum("bu,uhk->bhk", conv, p["wk"].astype(cd)).astype(f32)
+    v = jnp.einsum("bu,uhk->bhk", u1, p["wv"].astype(cd)).astype(f32)
+    ig = jnp.einsum("bu,uh->bh", conv.astype(f32), p["w_igate"].astype(f32)) + p["b_igate"]
+    fg = jnp.einsum("bu,uh->bh", conv.astype(f32), p["w_fgate"].astype(f32)) + p["b_fgate"]
+    logf = jax.nn.log_sigmoid(fg)
+    m_new = jnp.maximum(logf + state["m"], ig)  # (B,NH)
+    f_p = jnp.exp(logf + state["m"] - m_new)
+    i_p = jnp.exp(ig - m_new)
+    k_s = k / math.sqrt(dh)
+    C = f_p[..., None, None] * state["C"] + i_p[..., None, None] * (
+        v[..., :, None] * k_s[..., None, :]
+    )
+    n = f_p[..., None] * state["n"] + i_p[..., None] * k_s
+    num = jnp.einsum("bhij,bhj->bhi", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n, q)), jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(B, up).astype(cd)
+    out = (h * u2) @ p["w_down"].astype(cd)
+    new_state = {"C": C, "n": n, "m": m_new, "conv": hist[:, 1:].astype(state["conv"].dtype)}
+    return out[:, None], new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar memory, exponential gating, head-wise memory mixing)
+#
+# Heads operate on d_model (NH * head_dim == d_model); the block appends a
+# gated FFN (pf = 4/3) as in the official xLSTM block.
+# ---------------------------------------------------------------------------
+
+
+def slstm_specs(cfg: ModelConfig) -> dict:
+    D, NH, dh, pd = cfg.d_model, cfg.num_heads, cfg.head_dim, cfg.param_dtype
+    assert NH * dh == D, "sLSTM requires num_heads * head_dim == d_model"
+    ff = int(D * 4 / 3)
+    return {
+        "w_in": ParamSpec((4, D, NH, dh), (None, "embed", "heads", None), dtype=pd),
+        "r": ParamSpec((4, NH, dh, dh), (None, "heads", None, None), scale=0.01, dtype=pd),
+        "b": ParamSpec((4, NH, dh), (None, "heads", None), init="zeros", dtype=pd),
+        "w_group_norm": ParamSpec((D,), ("embed",), init="ones", dtype=pd),
+        "ff_gate": ParamSpec((D, ff), ("embed", "mlp"), dtype=pd),
+        "ff_up": ParamSpec((D, ff), ("embed", "mlp"), dtype=pd),
+        "ff_down": ParamSpec((ff, D), ("mlp", "embed"), dtype=pd),
+    }
+
+
+def _slstm_cell(p, xt, state):
+    """xt: (B, D) f32; state: dict(h, c, n, m) each (B, NH, dh)."""
+    h_prev, c_prev, n_prev, m_prev = state["h"], state["c"], state["n"], state["m"]
+    wx = jnp.einsum("bd,gdhk->gbhk", xt, p["w_in"].astype(jnp.float32))
+    rh = jnp.einsum("bhk,ghkl->gbhl", h_prev, p["r"].astype(jnp.float32))
+    z, i, f, o = [wx[g] + rh[g] + p["b"][g].astype(jnp.float32) for g in range(4)]
+    z = jnp.tanh(z)
+    o = jax.nn.sigmoid(o)
+    logf = jax.nn.log_sigmoid(f)
+    m = jnp.maximum(logf + m_prev, i)
+    i_p = jnp.exp(i - m)
+    f_p = jnp.exp(logf + m_prev - m)
+    c = f_p * c_prev + i_p * z
+    n = f_p * n_prev + i_p
+    h = o * c / jnp.maximum(n, 1e-6)
+    return {"h": h, "c": c, "n": n, "m": m}
+
+
+def _slstm_out(cfg: ModelConfig, p, hs):
+    """Group-norm + gated FFN applied to the mixed sequence output."""
+    from .layers import rms_norm  # local import avoids cycle
+
+    cd = cfg.compute_dtype
+    hs = rms_norm(hs.astype(cd), p["w_group_norm"], cfg.norm_eps)
+    f = jax.nn.gelu(hs @ p["ff_gate"].astype(cd)) * (hs @ p["ff_up"].astype(cd))
+    return f @ p["ff_down"].astype(cd)
+
+
+def slstm_block(cfg: ModelConfig, p, x):
+    """x: (B,S,D). lax.scan over time (memory mixing is inherently serial)."""
+    B, S, D = x.shape
+    NH, dh = cfg.num_heads, cfg.head_dim
+    state0 = slstm_init_state(cfg, B, x.dtype)
+
+    def step(state, xt):
+        new = _slstm_cell(p, xt, state)
+        return new, new["h"]
+
+    _, hs = jax.lax.scan(step, state0, jnp.moveaxis(x.astype(jnp.float32), 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(B, S, D)
+    return _slstm_out(cfg, p, hs)
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int, dtype):
+    NH, dh = cfg.num_heads, cfg.head_dim
+    z = lambda: jnp.zeros((batch, NH, dh), jnp.float32)
+    return {"h": z(), "c": z(), "n": z(), "m": jnp.full((batch, NH, dh), -1e30, jnp.float32)}
+
+
+def slstm_state_specs(cfg: ModelConfig, batch: int, dtype):
+    NH, dh = cfg.num_heads, cfg.head_dim
+    sds = lambda: jax.ShapeDtypeStruct((batch, NH, dh), jnp.float32)
+    return {"h": sds(), "c": sds(), "n": sds(), "m": sds()}
+
+
+def slstm_decode(cfg: ModelConfig, p, x, state):
+    B = x.shape[0]
+    new = _slstm_cell(p, x[:, 0].astype(jnp.float32), state)
+    hs = new["h"].reshape(B, 1, cfg.d_model)
+    return _slstm_out(cfg, p, hs), new

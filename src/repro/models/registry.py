@@ -1,0 +1,39 @@
+"""Model registry: family -> ModelDef (the uniform model interface)."""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+from . import encdec, transformer
+from .common import ModelConfig
+
+
+class ModelDef(NamedTuple):
+    param_specs: Callable  # (cfg) -> spec tree
+    train_nll: Callable  # (cfg, params, batch) -> (sum_nll, count)
+    prefill: Callable  # (cfg, params, batch, max_seq, cache_dtype) -> (logits, cache)
+    decode_step: Callable  # (cfg, params, cache, tokens) -> (logits, cache)
+    make_cache: Callable  # (cfg, batch, max_seq, dtype, abstract) -> cache
+    cache_axes: Callable  # (cfg) -> logical-axis tree matching make_cache
+
+
+_LM = ModelDef(
+    param_specs=transformer.param_specs,
+    train_nll=transformer.train_nll,
+    prefill=transformer.prefill,
+    decode_step=transformer.decode_step,
+    make_cache=transformer.make_cache,
+    cache_axes=transformer.cache_axes,
+)
+
+_ENCDEC = ModelDef(
+    param_specs=encdec.param_specs,
+    train_nll=encdec.train_nll,
+    prefill=encdec.prefill,
+    decode_step=encdec.decode_step,
+    make_cache=encdec.make_cache,
+    cache_axes=encdec.cache_axes,
+)
+
+
+def get_model(cfg: ModelConfig) -> ModelDef:
+    return _ENCDEC if cfg.family == "audio" else _LM

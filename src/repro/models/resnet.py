@@ -1,0 +1,65 @@
+"""The paper's CIFAR-10 experiment model: 32-layer residual network
+(He et al. 2016) with batch-normalization REMOVED (paper Fig. 2 right) —
+BN breaks the i.i.d.-likelihood interpretation needed for posterior
+sampling, so the paper drops it; we follow.
+
+ResNet-32 = 3 stages x 5 basic blocks x 2 convs + stem + head.
+Implemented with lax.conv_general_dilated; weight-standardization-free,
+plain residual blocks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamSpec
+
+
+def _conv_spec(cin, cout, k=3):
+    return ParamSpec((k, k, cin, cout), (None, None, None, "mlp"), scale=0.05)
+
+
+def param_specs(width: int = 16, num_classes: int = 10):
+    w = width
+    specs = {"stem": _conv_spec(3, w)}
+    for stage in range(3):
+        cin = w * (2 ** max(stage - 0, 0)) if stage == 0 else w * 2 ** (stage - 1)
+        cout = w * 2**stage
+        for blk in range(5):
+            bin_ = cin if blk == 0 else cout
+            specs[f"s{stage}b{blk}c1"] = _conv_spec(bin_, cout)
+            specs[f"s{stage}b{blk}c2"] = _conv_spec(cout, cout)
+            if bin_ != cout:
+                specs[f"s{stage}b{blk}proj"] = _conv_spec(bin_, cout, k=1)
+    specs["head_w"] = ParamSpec((w * 4, num_classes), ("mlp", None))
+    specs["head_b"] = ParamSpec((num_classes,), (None,), init="zeros")
+    return specs
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+
+
+def apply(params, x):
+    """x: (B, 32, 32, 3) -> logits (B, 10)."""
+    h = _conv(x, params["stem"])
+    for stage in range(3):
+        for blk in range(5):
+            stride = 2 if (stage > 0 and blk == 0) else 1
+            r = h
+            h1 = _conv(jax.nn.relu(h), params[f"s{stage}b{blk}c1"], stride)
+            h2 = _conv(jax.nn.relu(h1), params[f"s{stage}b{blk}c2"])
+            if f"s{stage}b{blk}proj" in params:
+                r = _conv(r, params[f"s{stage}b{blk}proj"], stride)
+            h = r + h2
+    h = jax.nn.relu(h).mean(axis=(1, 2))
+    return h @ params["head_w"] + params["head_b"]
+
+
+def nll_fn(params, batch):
+    logits = apply(params, batch["x"])
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logp, batch["y"][:, None], axis=-1)[:, 0]
+    return -jnp.sum(gold), jnp.asarray(batch["y"].shape[0], jnp.float32)

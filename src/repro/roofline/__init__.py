@@ -1,0 +1,1 @@
+from .analytic import analyze_cell, collective_model, flops_model, hbm_model

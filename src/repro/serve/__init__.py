@@ -1,0 +1,1 @@
+from .loop import make_decode_step, make_prefill_step

@@ -1,0 +1,41 @@
+"""Serving steps: prefill (prompt -> cache) and greedy decode.
+
+``decode_step``/``serve_step`` is what the decode_* and long_* dry-run cells
+lower: one new token against a KV/recurrent cache of seq_len."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelDef
+from repro.models.common import ModelConfig
+
+
+def make_prefill_step(cfg: ModelConfig, model: ModelDef, max_seq: int, cache_dtype=None):
+    def prefill_step(params, batch):
+        logits, cache = model.prefill(cfg, params, batch, max_seq, cache_dtype)
+        next_tokens = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return next_tokens, cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, model: ModelDef):
+    def serve_step(params, cache, tokens):
+        logits, new_cache = model.decode_step(cfg, params, cache, tokens)
+        next_tokens = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return next_tokens, new_cache
+
+    return serve_step
+
+
+def generate(cfg: ModelConfig, model: ModelDef, params, batch, max_seq: int, num_tokens: int):
+    """Host-side greedy generation loop (examples / integration tests)."""
+    prefill = jax.jit(make_prefill_step(cfg, model, max_seq))
+    step = jax.jit(make_decode_step(cfg, model))
+    tok, cache = prefill(params, batch)
+    out = [tok]
+    for _ in range(num_tokens - 1):
+        tok, cache = step(params, cache, tok)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

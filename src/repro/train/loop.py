@@ -1,0 +1,72 @@
+"""The training loop: sampler-driven posterior sampling with fault
+tolerance (atomic checkpoints, auto-resume, simulated preemption) and
+elastic chain scaling."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import apply_updates
+from . import checkpoint as ckpt_lib
+
+
+@dataclass
+class LoopConfig:
+    num_steps: int = 200
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    log_every: int = 10
+    keep_ckpts: int = 3
+    preempt_at: Optional[int] = None  # simulate a kill after this step
+    seed: int = 0
+
+
+class Preempted(RuntimeError):
+    pass
+
+
+def run(
+    train_step: Callable,  # (params, state, batch, rng) -> (params, state, metrics)
+    init_params,
+    init_state,
+    batch_fn: Callable,  # (step) -> batch
+    cfg: LoopConfig,
+    num_chains: int = 1,
+    alpha: float = 1.0,
+):
+    """Returns (params, state, history).  Auto-resumes from cfg.ckpt_dir."""
+    params, state = init_params, init_state
+    start = 0
+    if cfg.ckpt_dir:
+        got = ckpt_lib.restore_elastic(
+            cfg.ckpt_dir, params, state, num_chains=num_chains, alpha=alpha, seed=cfg.seed
+        )
+        if got is not None:
+            start, params, state, extra = got
+            print(f"[loop] resumed from step {start}" + (" (elastic)" if extra.get("elastic_resample") else ""))
+
+    step_jit = jax.jit(train_step, donate_argnums=(0, 1))
+    key = jax.random.key(cfg.seed)
+    history = []
+    t0 = time.time()
+    for t in range(start, cfg.num_steps):
+        batch = batch_fn(t)
+        params, state, metrics = step_jit(params, state, batch, jax.random.fold_in(key, t))
+        if cfg.ckpt_dir and (t + 1) % cfg.ckpt_every == 0:
+            ckpt_lib.save(cfg.ckpt_dir, t + 1, params, state)
+            ckpt_lib.prune(cfg.ckpt_dir, cfg.keep_ckpts)
+        if (t + 1) % cfg.log_every == 0:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = t + 1
+            m["wall_s"] = round(time.time() - t0, 2)
+            history.append(m)
+            print(f"[loop] step {t+1}: " + " ".join(f"{k}={v:.5g}" for k, v in m.items() if k != "step"))
+        if cfg.preempt_at is not None and (t + 1) == cfg.preempt_at:
+            raise Preempted(f"simulated preemption at step {t + 1}")
+    return params, state, history

@@ -1,0 +1,121 @@
+"""Fault-tolerance tests: atomic checkpointing, corrupted-checkpoint
+fallback, auto-resume, simulated preemption, elastic chain rescaling."""
+import json
+import shutil
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro.train import checkpoint as ck
+from repro.train.loop import LoopConfig, Preempted, run
+
+
+def _tiny_setup(num_chains=2):
+    params = jax.random.normal(jax.random.PRNGKey(0), (num_chains, 8))
+    sampler = core.ec_sghmc(step_size=1e-2, alpha=1.0, sync_every=2)
+    state = sampler.init(params)
+    return params, sampler, state
+
+
+class TestCheckpointRoundtrip:
+    def test_save_restore_exact(self, tmp_path):
+        params, sampler, state = _tiny_setup()
+        ck.save(tmp_path, 7, params, state)
+        got = ck.restore(tmp_path, params, state)
+        assert got is not None
+        step, p2, s2, _ = got
+        assert step == 7
+        np.testing.assert_array_equal(np.asarray(p2), np.asarray(params))
+        np.testing.assert_array_equal(np.asarray(s2.center), np.asarray(state.center))
+
+    def test_atomic_no_tmp_left(self, tmp_path):
+        params, sampler, state = _tiny_setup()
+        ck.save(tmp_path, 1, params, state)
+        assert not any(p.name.startswith("tmp.") for p in tmp_path.iterdir())
+
+    def test_corrupted_falls_back(self, tmp_path):
+        params, sampler, state = _tiny_setup()
+        ck.save(tmp_path, 1, params, state)
+        ck.save(tmp_path, 2, params, state)
+        # corrupt the newest checkpoint
+        newest = sorted(tmp_path.glob("step_*"))[-1]
+        (newest / "arrays.npz").write_bytes(b"garbage")
+        got = ck.restore(tmp_path, params, state)
+        assert got is not None and got[0] == 1
+
+    def test_manifest_shape_mismatch_detected(self, tmp_path):
+        params, sampler, state = _tiny_setup()
+        path = ck.save(tmp_path, 3, params, state)
+        m = json.loads((path / "manifest.json").read_text())
+        k = next(iter(m["shapes"]))
+        m["shapes"][k] = [999]
+        (path / "manifest.json").write_text(json.dumps(m))
+        assert ck.restore(tmp_path, params, state) is None
+
+    def test_prune_keeps_latest(self, tmp_path):
+        params, sampler, state = _tiny_setup()
+        for s in range(1, 6):
+            ck.save(tmp_path, s, params, state)
+        ck.prune(tmp_path, keep=2)
+        names = sorted(p.name for p in tmp_path.glob("step_*"))
+        assert names == ["step_00000004", "step_00000005"]
+
+
+class TestElasticRescale:
+    def test_restore_with_different_chain_count(self, tmp_path):
+        params, sampler, state = _tiny_setup(num_chains=2)
+        ck.save(tmp_path, 5, params, state)
+        # new job wants K=4: exact restore impossible -> resample from center
+        p4 = jnp.zeros((4, 8))
+        s4 = core.ec_sghmc(step_size=1e-2, alpha=1.0).init(p4)
+        got = ck.restore_elastic(tmp_path, p4, s4, num_chains=4, alpha=1.0)
+        assert got is not None
+        step, new_p, new_s, extra = got
+        assert step == 5 and new_p.shape == (4, 8)
+        assert extra.get("elastic_resample")
+        # chains scatter around the restored center
+        np.testing.assert_allclose(
+            np.asarray(new_s.center), np.asarray(state.center), atol=1e-6
+        )
+
+    def test_dead_chain_recovery_math(self):
+        """resample_chain_from_center gives the stationary conditional."""
+        params, sampler, state = _tiny_setup(num_chains=2)
+        new_p, new_s = core.resample_chain_from_center(
+            state, alpha=2.0, rng=jax.random.PRNGKey(1), num_chains=8
+        )
+        assert new_p.shape == (8, 8)
+        assert np.all(np.isfinite(np.asarray(new_p)))
+
+
+class TestLoopResume:
+    def _run(self, tmp_path, steps, preempt_at=None):
+        params, sampler, state = _tiny_setup()
+        grad = lambda t: t - 1.0  # U = ||theta - 1||^2/2
+
+        def train_step(params, state, batch, rng):
+            g = grad(params)
+            upd, state = sampler.update(g, state, params, rng)
+            return core.apply_updates(params, upd), state, {"nll_per_token": jnp.mean(g**2)}
+
+        cfg = LoopConfig(num_steps=steps, ckpt_dir=str(tmp_path), ckpt_every=5,
+                         log_every=100, preempt_at=preempt_at)
+        return run(train_step, params, state, lambda t: None, cfg, num_chains=2)
+
+    def test_preempt_then_resume(self, tmp_path):
+        with pytest.raises(Preempted):
+            self._run(tmp_path, steps=20, preempt_at=10)
+        # checkpoints exist up to step 10
+        assert (tmp_path / "step_00000010").exists()
+        # resume completes the run and picks up from step 10
+        params, state, _ = self._run(tmp_path, steps=20)
+        assert int(state.step) == 20
+
+    def test_resume_is_noop_when_done(self, tmp_path):
+        self._run(tmp_path, steps=10)
+        params, state, _ = self._run(tmp_path, steps=10)
+        assert int(state.step) == 10

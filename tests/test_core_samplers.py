@@ -1,0 +1,182 @@
+"""Behaviour tests for the SG-MCMC sampler library (paper Eqs. 4, 6, 9, 10)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from util import gaussian_grad, run_sampler
+
+MU = jnp.array([2.0, -1.0])
+
+
+class TestSGHMC:
+    def test_stationary_gaussian_moments(self):
+        """Eq. 4 targets N(mu, I) for U = ||x-mu||^2/2 (V=1, eq4 noise)."""
+        s = core.sghmc(step_size=5e-2, friction=1.0)
+        traj = run_sampler(s, jnp.zeros(2), gaussian_grad(MU), 8000, collect_from=2000)
+        np.testing.assert_allclose(traj.mean(0), np.asarray(MU), atol=0.15)
+        np.testing.assert_allclose(traj.var(0), 1.0, atol=0.35)
+
+    def test_temperature_zero_is_deterministic(self):
+        s = core.sghmc(step_size=1e-2, temperature=0.0)
+        t1 = run_sampler(s, jnp.ones(3), gaussian_grad(jnp.zeros(3)), 100, seed=0)
+        t2 = run_sampler(s, jnp.ones(3), gaussian_grad(jnp.zeros(3)), 100, seed=99)
+        np.testing.assert_array_equal(t1, t2)
+
+    def test_momentum_descends_potential(self):
+        """With temperature 0, SGHMC is momentum gradient descent on U."""
+        s = core.sghmc(step_size=1e-2, temperature=0.0)
+        traj = run_sampler(s, jnp.full(4, 5.0), gaussian_grad(jnp.zeros(4)), 1500)
+        assert np.linalg.norm(traj[-1]) < 0.5
+
+    def test_pytree_params(self):
+        params = {"w": jnp.ones((3, 2)), "b": {"x": jnp.zeros(5)}}
+        s = core.sghmc(step_size=1e-3)
+        st = s.init(params)
+        grads = jax.tree.map(jnp.ones_like, params)
+        upd, st2 = s.update(grads, st, params=params, rng=jax.random.PRNGKey(0))
+        assert jax.tree.structure(upd) == jax.tree.structure(params)
+        assert int(st2.step) == 1
+
+
+class TestECSGHMC:
+    def test_alpha0_temp0_equals_independent_sghmc(self):
+        """alpha=0 decouples Eq. 5 into K independent SGHMC Hamiltonians."""
+        K = 4
+        p0 = jax.random.normal(jax.random.PRNGKey(0), (K, 3))
+        ec = core.ec_sghmc(step_size=2e-2, alpha=0.0, temperature=0.0)
+        sg = core.sghmc(step_size=2e-2, temperature=0.0)
+        t_ec = run_sampler(ec, p0, gaussian_grad(jnp.zeros(3)), 200)
+        t_sg = run_sampler(sg, p0, gaussian_grad(jnp.zeros(3)), 200)
+        np.testing.assert_array_equal(t_ec, t_sg)
+
+    def test_stationary_mean(self):
+        ec = core.ec_sghmc(step_size=5e-2, alpha=1.0, sync_every=4)
+        p0 = jax.random.normal(jax.random.PRNGKey(1), (4, 2)) * 3
+        traj = run_sampler(ec, p0, gaussian_grad(MU), 8000, collect_from=2000)
+        np.testing.assert_allclose(traj.reshape(-1, 2).mean(0), np.asarray(MU), atol=0.2)
+
+    def test_eq4_convention_variance(self):
+        """With eq4 noise, C excluded from p-noise and weak coupling, each
+        chain's marginal variance approaches the posterior's (=1)."""
+        ec = core.ec_sghmc(
+            step_size=5e-2, alpha=0.05, sync_every=1,
+            noise_convention="eq4", center_noise_in_p=False,
+        )
+        p0 = jnp.zeros((4, 2)) + MU
+        traj = run_sampler(ec, p0, gaussian_grad(MU), 10000, collect_from=2000)
+        v = traj.reshape(-1, 2).var(0)
+        np.testing.assert_allclose(v, 1.0, atol=0.4)
+
+    def test_coupling_contracts_chains(self):
+        """The elastic force pulls chains toward the center: chain spread
+        with alpha>0 must be far below the uncoupled spread."""
+        p0 = jax.random.normal(jax.random.PRNGKey(2), (6, 2)) * 5
+        spread = {}
+        for alpha in (0.0, 2.0):
+            ec = core.ec_sghmc(step_size=5e-2, alpha=alpha, temperature=0.0)
+            traj = run_sampler(ec, p0, gaussian_grad(MU, prec=0.0), 300)
+            spread[alpha] = float(np.mean(np.var(traj[-1], axis=0)))
+        assert spread[2.0] < 0.1 * spread[0.0]
+
+    def test_sync_period_gates_center_exchange(self):
+        """c̃ must change only at steps ≡ 0 (mod s)."""
+        s = 4
+        ec = core.ec_sghmc(step_size=1e-2, alpha=1.0, sync_every=s)
+        params = jax.random.normal(jax.random.PRNGKey(3), (3, 2))
+        st = ec.init(params)
+        grad = gaussian_grad(jnp.zeros(2))
+        stales = [np.asarray(st.center_stale)]
+        for i in range(9):
+            upd, st = ec.update(grad(params), st, params=params, rng=jax.random.PRNGKey(i))
+            params = core.apply_updates(params, upd)
+            stales.append(np.asarray(st.center_stale))
+        for t in range(1, 10):
+            changed = not np.array_equal(stales[t], stales[t - 1])
+            assert changed == (t % s == 0), f"step {t}: stale-center changed={changed}"
+
+    def test_resample_chain_from_center(self):
+        ec = core.ec_sghmc(step_size=1e-2, alpha=2.0)
+        params = jax.random.normal(jax.random.PRNGKey(0), (4, 8))
+        st = ec.init(params)
+        new_params, new_state = core.resample_chain_from_center(
+            st, alpha=2.0, rng=jax.random.PRNGKey(1), num_chains=6
+        )
+        assert new_params.shape == (6, 8)
+        assert new_state.momentum.shape == (6, 8)
+        # chains scatter around the center with variance K/alpha
+        centered = np.asarray(new_params) - np.asarray(st.center)[None]
+        assert abs(centered.var() - 6 / 2.0) < 1.5
+
+
+class TestAsyncSGHMC:
+    def test_s1_k1_equals_sghmc(self):
+        """One worker syncing every step == plain SGHMC, bit-exact."""
+        a = core.async_sghmc(step_size=2e-2, num_workers=1, sync_every=1, temperature=0.0)
+        s = core.sghmc(step_size=2e-2, temperature=0.0)
+        p0 = jnp.array([3.0, -2.0])
+
+        def grad_k(t):  # async targets have leading worker axis
+            return jax.vmap(gaussian_grad(jnp.zeros(2)))(t)
+
+        t_a = run_sampler(a, p0, grad_k, 100)
+        t_s = run_sampler(s, p0, gaussian_grad(jnp.zeros(2)), 100)
+        np.testing.assert_allclose(t_a, t_s, atol=1e-6)
+
+    def test_staleness_of_snapshots(self):
+        """Snapshots refresh only on each worker's phase step."""
+        K, s = 4, 2
+        a = core.async_sghmc(step_size=1e-2, num_workers=K, sync_every=s)
+        params = jnp.ones(3)
+        st = a.init(params)
+        for t in range(6):
+            prev = np.asarray(st.snapshots)
+            g = jax.vmap(gaussian_grad(jnp.zeros(3)))(a.grad_targets(st, params))
+            upd, st = a.update(g, st, params=params, rng=jax.random.PRNGKey(t))
+            params = core.apply_updates(params, upd)
+            cur = np.asarray(st.snapshots)
+            for k in range(K):
+                if t % s == k % s:  # arrived: snapshot == post-update params
+                    np.testing.assert_allclose(cur[k], np.asarray(params), atol=1e-7)
+                else:  # idle: snapshot untouched
+                    np.testing.assert_array_equal(cur[k], prev[k])
+
+    def test_stationary_mean(self):
+        a = core.async_sghmc(step_size=5e-2, num_workers=4, sync_every=2)
+
+        def grad_k(t):
+            return jax.vmap(gaussian_grad(MU))(t)
+
+        traj = run_sampler(a, jnp.zeros(2), grad_k, 8000, collect_from=2000)
+        np.testing.assert_allclose(traj.mean(0), np.asarray(MU), atol=0.25)
+
+
+class TestSGLD:
+    def test_stationary_gaussian_moments(self):
+        s = core.sgld(step_size=1e-2)
+        traj = run_sampler(s, jnp.zeros(2), gaussian_grad(MU), 20000, collect_from=4000)
+        np.testing.assert_allclose(traj.mean(0), np.asarray(MU), atol=0.15)
+        np.testing.assert_allclose(traj.var(0), 1.0, atol=0.3)
+
+
+class TestECSGLD:
+    def test_stationary_mean(self):
+        ec = core.ec_sgld(step_size=1e-2, alpha=1.0, sync_every=2)
+        p0 = jax.random.normal(jax.random.PRNGKey(1), (4, 2))
+        traj = run_sampler(ec, p0, gaussian_grad(MU), 12000, collect_from=4000)
+        np.testing.assert_allclose(traj.reshape(-1, 2).mean(0), np.asarray(MU), atol=0.2)
+
+
+class TestSchedules:
+    def test_polynomial_decay_conditions(self):
+        sch = core.polynomial_decay(a=1.0, b=10.0, gamma=0.55)
+        vals = [float(sch(jnp.int32(t))) for t in (0, 10, 100, 1000)]
+        assert all(v > 0 for v in vals)
+        assert vals == sorted(vals, reverse=True)
+
+    def test_warmup_cosine(self):
+        sch = core.warmup_cosine(peak=1.0, warmup_steps=10, total_steps=100)
+        assert float(sch(jnp.int32(0))) == 0.0
+        assert abs(float(sch(jnp.int32(10))) - 1.0) < 1e-6
+        assert float(sch(jnp.int32(100))) < 1e-6

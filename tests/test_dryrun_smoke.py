@@ -1,0 +1,64 @@
+"""Dry-run machinery smoke test: every arch's SMOKE config must lower +
+compile for train/prefill/decode on a multi-device mini-mesh (8 host
+devices via a subprocess env), and the collective parser must see the EC
+sync.  This is the CI guard for the full 512-device dry-run."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro import configs
+
+ROOT = Path(__file__).resolve().parent.parent
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+import sys, json
+import jax
+from repro.launch.specs import build_cell
+from repro.launch import mesh as mesh_lib
+from repro.launch.dryrun import parse_collectives
+import repro.configs as configs
+
+configs.SHAPES["train_4k"] = configs.ShapeCell("train_4k", "train", 64, 8)
+configs.SHAPES["prefill_32k"] = configs.ShapeCell("prefill_32k", "prefill", 64, 8)
+configs.SHAPES["decode_32k"] = configs.ShapeCell("decode_32k", "decode", 64, 8)
+configs.SHAPES["long_500k"] = configs.ShapeCell("long_500k", "decode", 256, 1)
+
+arch = sys.argv[1]
+out = {}
+for shape in [c.name for c in configs.cells(arch)]:
+    kind = configs.SHAPES[shape].kind
+    mesh = (mesh_lib.make_train_mesh(2, size=4) if kind == "train"
+            else mesh_lib.make_production_mesh(size=4))
+    cell = build_cell(arch, shape, mesh, smoke=True,
+                      num_chains=2 if kind == "train" else None)
+    with mesh:
+        j = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                    out_shardings=cell.out_shardings,
+                    donate_argnums=cell.donate_argnums)
+        compiled = j.lower(*cell.args).compile()
+        coll = parse_collectives(compiled.as_text())
+    out[shape] = {k: v["count"] for k, v in coll.items()}
+print("RESULT:" + json.dumps(out))
+"""
+
+
+@pytest.mark.parametrize("arch", list(configs.ARCH_IDS))
+def test_smoke_dryrun_all_shapes(arch):
+    env = dict(os.environ, PYTHONPATH=str(ROOT / "src"))
+    proc = subprocess.run(
+        [sys.executable, "-c", _SCRIPT, arch],
+        capture_output=True, text=True, env=env, timeout=1200,
+    )
+    assert proc.returncode == 0, f"{arch}: {proc.stderr[-3000:]}"
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT:")][0]
+    out = json.loads(line[len("RESULT:"):])
+    expected = {c.name for c in configs.cells(arch)}
+    assert set(out) == expected
+    # the EC sync collective must exist in the train program
+    assert any(k in out["train_4k"] for k in ("all-reduce", "reduce-scatter")), out["train_4k"]

@@ -1,0 +1,80 @@
+"""End-to-end integration tests through the public launchers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs, core
+from repro.launch.serve import ensemble_decode
+from repro.launch.train import build_batch_fn
+from repro.models import get_model, init_params
+from repro.serve.loop import generate
+from repro.train.loop import LoopConfig, run
+from repro.train.step import make_train_step
+
+
+class TestTrainIntegration:
+    @pytest.mark.parametrize("arch", ["qwen3-0.6b", "recurrentgemma-2b"])
+    def test_ec_training_reduces_nll(self, arch, tmp_path):
+        cfg = configs.get_config(arch, smoke=True)
+        model = get_model(cfg)
+        K = 2
+        sampler = core.ec_sghmc(step_size=5e-5, alpha=1.0, sync_every=4)
+        # n_data sets the N/|B| potential scale; keep it commensurate with
+        # the tiny smoke batches or gradients explode (batch 2x2x32 tokens)
+        step = make_train_step(cfg, model, sampler, n_data=10_000)
+        params = core.tree_broadcast_axis0(
+            init_params(model.param_specs(cfg), jax.random.PRNGKey(0)), K
+        )
+        state = sampler.init(params)
+        batch_fn = build_batch_fn(cfg, K, per_chain=2, seq_len=32)
+        cfg_loop = LoopConfig(num_steps=30, ckpt_dir=str(tmp_path), ckpt_every=10, log_every=5)
+        params, state, history = run(step, params, state, batch_fn, cfg_loop, num_chains=K)
+        assert len(history) >= 2
+        # sampling at tiny step size should not diverge and should descend
+        first, last = history[0]["nll_per_token"], history[-1]["nll_per_token"]
+        assert np.isfinite(last)
+        assert last < first * 1.05
+        assert (tmp_path / "step_00000030").exists()
+
+    def test_vlm_batch_fn_shapes(self):
+        from repro.launch.specs import vlm_patches
+
+        cfg = configs.get_config("qwen2-vl-7b", smoke=True)
+        fn = build_batch_fn(cfg, num_chains=2, per_chain=2, seq_len=96)
+        b = fn(0)
+        n_patch = vlm_patches(96)
+        assert b["patch_embeds"].shape == (2, 2, n_patch, cfg.d_model)
+        assert b["tokens"].shape == (2, 2, 96 - n_patch)
+        # full-size shapes keep the standard 64-patch prefix
+        assert vlm_patches(4096) == 64
+
+
+class TestServeIntegration:
+    def test_generate_roundtrip(self):
+        cfg = configs.get_config("h2o-danube-1.8b", smoke=True)
+        model = get_model(cfg)
+        params = init_params(model.param_specs(cfg), jax.random.PRNGKey(0))
+        batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab_size)}
+        toks = generate(cfg, model, params, batch, max_seq=24, num_tokens=6)
+        assert toks.shape == (2, 6)
+        assert int(toks.min()) >= 0 and int(toks.max()) < cfg.vocab_size
+
+    def test_ensemble_decode_matches_single_when_k1(self):
+        cfg = configs.get_config("qwen3-0.6b", smoke=True)
+        model = get_model(cfg)
+        params = init_params(model.param_specs(cfg), jax.random.PRNGKey(0))
+        batch = {"tokens": jax.random.randint(jax.random.PRNGKey(2), (1, 8), 0, cfg.vocab_size)}
+        single = generate(cfg, model, params, batch, max_seq=20, num_tokens=4)
+        stacked = jax.tree.map(lambda x: x[None], params)
+        ens = ensemble_decode(cfg, model, stacked, batch, max_seq=20, num_tokens=4)
+        np.testing.assert_array_equal(np.asarray(single), np.asarray(ens))
+
+    def test_ensemble_averages_distinct_models(self):
+        cfg = configs.get_config("qwen3-0.6b", smoke=True)
+        model = get_model(cfg)
+        keys = jax.random.split(jax.random.PRNGKey(3), 3)
+        params = jax.vmap(lambda k: init_params(model.param_specs(cfg), k))(keys)
+        batch = {"tokens": jax.random.randint(jax.random.PRNGKey(4), (2, 8), 0, cfg.vocab_size)}
+        toks = ensemble_decode(cfg, model, params, batch, max_seq=20, num_tokens=4)
+        assert toks.shape == (2, 4)

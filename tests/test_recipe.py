@@ -1,0 +1,64 @@
+"""Theory-layer tests: Ma et al. complete recipe (Eq. 1-3) and the paper's
+claims that SGHMC / EC-SGHMC are valid instances (§1.1.1, Prop. 3.1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import recipe
+
+
+def grad_U_gauss(theta):
+    return theta  # U = ||theta||^2 / 2, posterior N(0, I)
+
+
+class TestRecipeValidity:
+    def test_sghmc_instance_is_valid(self):
+        r = recipe.sghmc_recipe(grad_U_gauss, dim=3, friction=1.0)
+        recipe.validate(r)  # D PSD, Q skew-symmetric
+
+    def test_ec_sghmc_instance_is_valid(self):
+        """Prop 3.1's D = diag([0, V, 0, C]) and symplectic Q."""
+        r = recipe.ec_sghmc_recipe(grad_U_gauss, dim=2, num_chains=3, alpha=0.7)
+        recipe.validate(r)
+
+    def test_invalid_q_rejected(self):
+        r = recipe.Recipe(grad_U_gauss, D=jnp.eye(2), Q=jnp.eye(2))
+        with pytest.raises(ValueError):
+            recipe.validate(r)
+
+    def test_invalid_d_rejected(self):
+        r = recipe.Recipe(grad_U_gauss, D=-jnp.eye(2), Q=jnp.zeros((2, 2)))
+        with pytest.raises(ValueError):
+            recipe.validate(r)
+
+
+class TestRecipeDynamics:
+    def test_sghmc_recipe_targets_gaussian(self):
+        r = recipe.sghmc_recipe(grad_U_gauss, dim=2, friction=1.0)
+        z0 = jnp.zeros(4)
+        traj = recipe.simulate(r, z0, eps=5e-2, num_steps=8000, rng=jax.random.PRNGKey(0))
+        theta = np.asarray(traj[2000:, :2])
+        np.testing.assert_allclose(theta.mean(0), 0.0, atol=0.15)
+        np.testing.assert_allclose(theta.var(0), 1.0, atol=0.35)
+
+    def test_ec_recipe_marginal_mean(self):
+        K, d = 3, 2
+        r = recipe.ec_sghmc_recipe(grad_U_gauss, dim=d, num_chains=K, alpha=0.5)
+        m = (K + 1) * d
+        z0 = jnp.zeros(2 * m)
+        traj = recipe.simulate(r, z0, eps=5e-2, num_steps=6000, rng=jax.random.PRNGKey(1))
+        thetas = np.asarray(traj[2000:, : K * d]).reshape(-1, d)
+        np.testing.assert_allclose(thetas.mean(0), 0.0, atol=0.2)
+
+    def test_gamma_zero_for_constant_dq(self):
+        """Γ_i = Σ_j ∂(D+Q)_ij/∂z_j = 0 for constant matrices — the recipe
+        step we implement assumes this; sanity-check the math by finite
+        differences of the drift field."""
+        r = recipe.sghmc_recipe(grad_U_gauss, dim=1)
+        z = jnp.array([0.3, -0.7])
+        drift = -(r.D + r.Q) @ r.grad_H(z)
+        # For H = theta^2/2 + p^2/2: drift = [p, -theta - V p]
+        np.testing.assert_allclose(
+            np.asarray(drift), [z[1], -z[0] - z[1]], rtol=1e-6
+        )

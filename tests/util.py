@@ -1,0 +1,36 @@
+"""Shared test helpers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import core
+
+
+def run_sampler(sampler, params, grad_fn, num_steps, seed=0, collect_from=0):
+    """Drive a sampler with exact gradients via lax.scan; return trajectory
+    (num_steps, *params.shape) of the param vector."""
+    state = sampler.init(params)
+
+    def body(carry, key):
+        p, st = carry
+        targets = sampler.grad_targets(st, p) if sampler.grad_targets else p
+        g = grad_fn(targets)
+        upd, st = sampler.update(g, st, params=p, rng=key)
+        p = core.apply_updates(p, upd)
+        return (p, st), p
+
+    keys = jax.random.split(jax.random.PRNGKey(seed), num_steps)
+    (_, _), traj = jax.lax.scan(body, (params, state), keys)
+    return np.asarray(traj[collect_from:])
+
+
+def gaussian_grad(mu, prec=1.0):
+    """grad U for N(mu, prec^-1 I): U = 0.5 * prec * ||x - mu||^2.
+    Handles a leading chain axis transparently (elementwise)."""
+
+    def grad(theta):
+        return prec * (theta - mu)
+
+    return grad
