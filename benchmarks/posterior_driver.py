@@ -15,6 +15,7 @@ import numpy as np
 import math
 
 from repro import core
+from repro import diagnostics as diag
 from repro.data.pipeline import ShardedLoader
 
 
@@ -43,7 +44,13 @@ def run_sampling(
     weight_decay: float = 1e-5,
     burnin_frac: float = 0.25,
     seed: int = 0,
+    collect_diagnostics: bool = False,
 ):
+    """When ``collect_diagnostics`` is set, additionally returns a dict of
+    shared convergence diagnostics (repro.diagnostics): post-burn-in probe
+    ESS / split-R̂, streaming parameter moments, cross-chain spread, and the
+    sampler's own stats hook — the machinery benchmarks previously
+    hand-rolled per script."""
     prior = core.gaussian_prior(weight_decay)
     pot = core.make_potential(nll_fn, n_data=n_data, prior=prior)
     params1 = init_params_fn(jax.random.PRNGKey(seed))
@@ -83,8 +90,20 @@ def run_sampling(
             return jnp.sum(jax.vmap(f)(params), axis=0)
         return f(params)
 
+    @jax.jit
+    def probe_fn(params):
+        """First few coordinates of the first leaf, per chain — the scalar
+        series the ESS / R̂ estimators run on."""
+        leaf = jax.tree.leaves(params)[0].astype(jnp.float32)
+        k = leaf.shape[0] if num_chains > 1 else 1
+        return leaf.reshape(k, -1)[:, :4]
+
+    wf_add = jax.jit(diag.welford_add)
+
     key = jax.random.PRNGKey(seed + 1)
     curve = []
+    probes = []
+    wf = None
     prob_sum = jnp.zeros((xt.shape[0], 10), jnp.float32)
     n_acc = 0
     burnin = int(steps * burnin_frac)
@@ -97,6 +116,9 @@ def run_sampling(
             batch = wl.batch(t)
         key, sub = jax.random.split(key)
         params, state = step_fn(params, state, batch, sub)
+        if collect_diagnostics and t >= burnin:
+            probes.append(probe_fn(params))
+            wf = wf_add(wf, params) if wf is not None else wf_add(diag.welford_init(params), params)
         if (t + 1) % eval_every == 0:
             if t >= burnin:  # accumulate posterior-predictive after burn-in
                 prob_sum = prob_sum + chain_probs(params)
@@ -105,4 +127,27 @@ def run_sampling(
             nll_now = float(predictive_nll(cur, num_chains))
             nll_avg = float(predictive_nll(prob_sum, max(n_acc, 1))) if n_acc else nll_now
             curve.append({"step": t + 1, "nll": nll_now, "nll_bma": nll_avg})
-    return params, curve
+    if not collect_diagnostics:
+        return params, curve
+
+    chains = np.moveaxis(np.asarray(jnp.stack(probes)), 1, 0)  # (K, T', 4)
+    # element-weighted mean variance (same convention as cross_chain_spread)
+    var_leaves = jax.tree.leaves(diag.welford_var(wf))
+    param_var = float(
+        sum(float(jnp.sum(v)) for v in var_leaves)
+        / max(sum(int(v.size) for v in var_leaves), 1)
+    )
+    info = {
+        # pooled assumes independent chains (upper bound under coupling);
+        # chain_mean is the conservative coupled-chain estimate
+        "probe_ess": float(np.sum(diag.effective_sample_size_nd(chains))),
+        "probe_ess_chain_mean": float(np.sum(diag.coupled_ess_nd(chains))),
+        "probe_split_rhat": float(np.max(diag.split_rhat_nd(chains))),
+        "param_var": param_var,
+        "chain_spread": float(diag.cross_chain_spread(params)) if num_chains > 1 else 0.0,
+    }
+    if sampler.stats is not None:
+        info["sampler_stats"] = {
+            k: float(v) for k, v in sampler.stats(state, params).items()
+        }
+    return params, curve, info

@@ -2,7 +2,11 @@
 SGHMC vs EC-SGHMC on the MLP posterior.
 
 Claim reproduced: small s (1 < s < 4) is unproblematic even for the naive
-scheme; growing s hurts Async SGHMC much more than EC-SGHMC."""
+scheme; growing s hurts Async SGHMC much more than EC-SGHMC.
+
+Mixing diagnostics (probe ESS, split-R̂, cross-chain spread) come from the
+shared ``repro.diagnostics`` subsystem via the posterior driver — staleness
+should depress the naive scheme's ESS before it shows in final NLL."""
 from __future__ import annotations
 
 import time
@@ -39,14 +43,25 @@ def run():
                 core.ec_sghmc(step_size=EPS, friction=FRIC, center_friction=FRIC, alpha=1.0,
                               sync_every=s, noise_convention="eq4", center_noise_in_p=False), K),
         }.items():
+            # dt includes diagnostics collection (2 small jitted dispatches
+            # per post-burn-in step, <1% of these multi-ms model steps) —
+            # the cost column is a sweep-internal comparator, not a roofline
             t0 = time.time()
-            _, curve = run_sampling(
+            _, curve, info = run_sampling(
                 mlp.apply, mlp.nll_fn, init_fn, sampler, chains, train, test,
                 n_data=n_train, steps=steps, eval_every=steps,
+                collect_diagnostics=True,
             )
             dt = time.time() - t0
             out[name] = curve[-1]["nll"]
             emit(f"staleness/{name}_final_nll", 1e6 * dt / steps, f"{curve[-1]['nll']:.4f}")
+            emit(f"staleness/{name}_probe_ess_chain_mean", 1e6 * dt / steps,
+                 f"{info['probe_ess_chain_mean']:.0f}")
+            emit(f"staleness/{name}_split_rhat", 1e6 * dt / steps,
+                 f"{info['probe_split_rhat']:.3f}")
+            if chains > 1:
+                emit(f"staleness/{name}_chain_spread", 1e6 * dt / steps,
+                     f"{info['chain_spread']:.5f}")
     # degradation from s=1 to s_max per scheme
     smax = svals[-1]
     d_async = out[f"async_s{smax}"] - out["async_s1"]

@@ -41,8 +41,29 @@ import jax.numpy as jnp
 
 from .schedules import as_schedule
 from .sghmc import _noise_scale
-from .tree_util import tree_mean_axis0, tree_random_normal
+from .tree_util import count_params, global_norm, tree_mean_axis0, tree_random_normal
 from .types import Sampler
+
+
+def p_step(p, g, theta, c_tilde, noise, *, eps, friction, minv, alpha, sigma_p,
+           out_dtype=jnp.float32):
+    """Eq. 6 momentum line, one leaf:  p' = (1 - eps V M^-1) p - eps g
+    - eps alpha (theta - c̃) + sigma_p n.  The coupling force enters through
+    the momentum — the paper's physics-respecting placement (vs. EAMSGD's
+    position placement).
+
+    Term grouping deliberately mirrors the fused Pallas kernel
+    (`repro.kernels.fused_ecsghmc._kernel`) so that, given the same noise,
+    the unfused and fused paths agree BIT-FOR-BIT in f32 — asserted by
+    tests/test_fused_equivalence.py."""
+    p32 = p.astype(jnp.float32)
+    out = (
+        (1.0 - eps * friction * minv) * p32
+        - eps * g.astype(jnp.float32)
+        - eps * alpha * (theta.astype(jnp.float32) - c_tilde.astype(jnp.float32))
+        + sigma_p * noise
+    )
+    return out.astype(out_dtype)
 
 
 class ECSGHMCState(NamedTuple):
@@ -127,23 +148,12 @@ def ec_sghmc(
             del new_theta_f  # updates (above) already carry eps*M^-1*p
         else:
             noise_p = tree_random_normal(k_p, state.momentum, jnp.float32)
-
-            def p_step(p, g, th, c_tilde, n):
-                # coupling force enters through the momentum — the paper's
-                # physics-respecting placement (vs. EAMSGD's position
-                # placement).
-                p32 = p.astype(jnp.float32)
-                out = (
-                    p32
-                    - eps * g.astype(jnp.float32)
-                    - eps * friction * minv * p32
-                    - eps * alpha * (th.astype(jnp.float32) - c_tilde.astype(jnp.float32))
-                    + sigma_p * n
-                )
-                return out.astype(state_dtype)
-
             new_momentum = jax.tree.map(
-                p_step, state.momentum, grads, params, state.center_stale, noise_p
+                lambda p, g, th, ct, n: p_step(
+                    p, g, th, ct, n, eps=eps, friction=friction, minv=minv,
+                    alpha=alpha, sigma_p=sigma_p, out_dtype=state_dtype,
+                ),
+                state.momentum, grads, params, state.center_stale, noise_p,
             )
 
         def r_step(r, c, mth, n):
@@ -194,7 +204,27 @@ def ec_sghmc(
         )
         return updates, new_state
 
-    return Sampler(init, update)
+    def stats(state, params):
+        """Jit-safe scalar diagnostics: the numbers repro.diagnostics and
+        the drivers poll to watch coupling health without a host sync."""
+        diff = jax.tree.map(
+            lambda th, c: th.astype(jnp.float32) - c.astype(jnp.float32)[None],
+            params,
+            state.center,
+        )
+        n_elem = max(count_params(params), 1)
+        rms = global_norm(diff) / jnp.sqrt(jnp.float32(n_elem))
+        k = jax.tree.leaves(params)[0].shape[0]
+        return {
+            "step": state.step,
+            "momentum_norm": global_norm(state.momentum),
+            "center_momentum_norm": global_norm(state.center_momentum),
+            "chain_center_rms": rms,
+            # the Eq. 5 coupling energy (1/K) sum_i (alpha/2)||theta^i - c||^2
+            "coupling_energy": 0.5 * alpha * rms * rms * (n_elem / k),
+        }
+
+    return Sampler(init, update, stats=stats)
 
 
 def resample_chain_from_center(state: ECSGHMCState, alpha: float, rng, num_chains: int):

@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from .schedules import as_schedule
-from .tree_util import tree_mean_axis0, tree_random_normal
+from .tree_util import count_params, global_norm, tree_mean_axis0, tree_random_normal
 from .types import Sampler
 
 
@@ -105,4 +105,15 @@ def ec_sgld(
             step=state.step + 1,
         )
 
-    return Sampler(init, update)
+    def stats(state, params):
+        diff = jax.tree.map(
+            lambda th, c: th.astype(jnp.float32) - c[None], params, state.center
+        )
+        n_elem = max(count_params(params), 1)
+        return {
+            "step": state.step,
+            "center_momentum_norm": global_norm(state.center_momentum),
+            "chain_center_rms": global_norm(diff) / jnp.sqrt(jnp.float32(n_elem)),
+        }
+
+    return Sampler(init, update, stats=stats)

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from .schedules import as_schedule
-from .tree_util import tree_random_normal
+from .tree_util import global_norm, tree_random_normal
 from .types import Sampler
 
 
@@ -74,11 +74,18 @@ def sghmc(
         noise = tree_random_normal(rng, state.momentum, jnp.float32)
 
         def mom_step(p, g, n):
+            # decay form (1 - eps V M^-1) p: the association the fused
+            # Pallas kernel uses, so the coupled sampler's unfused path
+            # stays bit-identical at alpha=0
             p32 = p.astype(jnp.float32)
-            out = p32 - eps * g.astype(jnp.float32) - eps * friction * minv * p32 + sigma * n
+            out = (1.0 - eps * friction * minv) * p32 - eps * g.astype(jnp.float32) + sigma * n
             return out.astype(state_dtype)
 
         new_mom = jax.tree.map(mom_step, state.momentum, grads, noise)
         return updates, SGHMCState(momentum=new_mom, step=state.step + 1)
 
-    return Sampler(init, update)
+    def stats(state, params):
+        del params
+        return {"step": state.step, "momentum_norm": global_norm(state.momentum)}
+
+    return Sampler(init, update, stats=stats)

@@ -29,12 +29,19 @@ class Sampler(NamedTuple):
     caller must evaluate gradients before calling ``update``.  ``None``
     means "at params".  Stale-gradient samplers (approach I) point this at
     their worker snapshots.
+
+    ``stats`` (optional): (state, params) -> dict of scalar diagnostics
+    (jnp scalars; jit-safe, no host sync).  The lightweight hook the
+    convergence-diagnostics subsystem (``repro.diagnostics``) and the
+    drivers poll — training/benchmark loops log it, the stationary test
+    battery asserts on it.  ``None`` means the sampler exposes nothing.
     """
 
     init: Callable[[Params], State]
     # update(grads, state, params, rng) -> (updates, new_state)
     update: Callable[..., tuple[Updates, State]]
     grad_targets: Callable[[State, Params], Params] | None = None
+    stats: Callable[[State, Params], dict] | None = None
 
 
 class ScheduleFn:  # pragma: no cover - typing helper only

@@ -1,0 +1,79 @@
+"""Convergence diagnostics for the coupled SG-MCMC samplers.
+
+Three layers, used together by the stationary test battery and the
+benchmarks:
+
+- ``moments``  — streaming Welford accumulators over pytrees (jit/scan
+  compatible; chain-axis aware pooling).
+- ``ess``      — FFT-autocorrelation effective sample size and split-R̂
+  (host-side numpy, post-hoc).
+- ``oracle``   — exact stationary moments of the discrete-time sampler
+  recursions on a Gaussian target (the ground truth empirical moments are
+  gated against; no small-ε approximation).
+- ``spread``   — cross-chain / ensemble dispersion scalars.
+"""
+from .ess import (
+    autocorrelation,
+    coupled_ess,
+    coupled_ess_nd,
+    effective_sample_size,
+    effective_sample_size_nd,
+    split_rhat,
+    split_rhat_nd,
+)
+from .moments import (
+    ChainSummary,
+    MomentState,
+    chain_summary,
+    welford_add,
+    welford_init,
+    welford_mean,
+    welford_merge,
+    welford_std,
+    welford_var,
+)
+from .oracle import (
+    GaussianOracle,
+    ec_sghmc_stationary,
+    lyapunov_stationary,
+    monte_carlo_tolerance,
+    noise_sigmas,
+    sghmc_stationary,
+    sgld_stationary,
+)
+from .spread import (
+    chain_center_rms,
+    cross_chain_spread,
+    ensemble_spread,
+    pooled_moments,
+)
+
+__all__ = [
+    "autocorrelation",
+    "coupled_ess",
+    "coupled_ess_nd",
+    "effective_sample_size",
+    "effective_sample_size_nd",
+    "split_rhat",
+    "split_rhat_nd",
+    "ChainSummary",
+    "MomentState",
+    "chain_summary",
+    "welford_add",
+    "welford_init",
+    "welford_mean",
+    "welford_merge",
+    "welford_std",
+    "welford_var",
+    "GaussianOracle",
+    "ec_sghmc_stationary",
+    "lyapunov_stationary",
+    "monte_carlo_tolerance",
+    "noise_sigmas",
+    "sghmc_stationary",
+    "sgld_stationary",
+    "chain_center_rms",
+    "cross_chain_spread",
+    "ensemble_spread",
+    "pooled_moments",
+]

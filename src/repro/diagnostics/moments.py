@@ -1,0 +1,128 @@
+"""Streaming moment accumulation over pytrees (Welford / Chan).
+
+The accumulator is itself a pytree of arrays, so it jits, donates, and rides
+as a ``lax.scan`` carry — samplers can accumulate stationary moments for
+millions of steps without materializing a trajectory.  All arithmetic is
+f32 regardless of the sample dtype (bf16 chains accumulate exactly like
+their f32 reference).
+
+Chain-axis convention: leaves may carry a leading chain axis of size K
+(the repo-wide SPMD layout).  ``welford_*`` functions are elementwise and
+agnostic to it; ``chain_summary`` interprets axis 0 as chains and pools.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class MomentState(NamedTuple):
+    """Running (count, mean, M2) per element of the template tree."""
+
+    count: jnp.ndarray  # scalar f32 (shared across leaves)
+    mean: Any  # pytree, f32
+    m2: Any  # pytree, f32: sum of squared deviations
+
+
+def welford_init(template) -> MomentState:
+    zeros = lambda x: jnp.zeros(jnp.shape(x), jnp.float32)
+    return MomentState(
+        count=jnp.zeros((), jnp.float32),
+        mean=jax.tree.map(zeros, template),
+        m2=jax.tree.map(zeros, template),
+    )
+
+
+def welford_add(state: MomentState, sample) -> MomentState:
+    """One streaming update; O(1) memory, scan-compatible."""
+    n = state.count + 1.0
+
+    def upd(mean, m2, x):
+        x = x.astype(jnp.float32)
+        delta = x - mean
+        mean_new = mean + delta / n
+        return mean_new, m2 + delta * (x - mean_new)
+
+    flat_mean, treedef = jax.tree.flatten(state.mean)
+    pairs = [
+        upd(m, m2, x)
+        for m, m2, x in zip(
+            flat_mean, jax.tree.leaves(state.m2), treedef.flatten_up_to(sample)
+        )
+    ]
+    return MomentState(
+        count=n,
+        mean=jax.tree.unflatten(treedef, [p[0] for p in pairs]),
+        m2=jax.tree.unflatten(treedef, [p[1] for p in pairs]),
+    )
+
+
+def welford_merge(a: MomentState, b: MomentState) -> MomentState:
+    """Chan et al. parallel combine — merge shards accumulated
+    independently (map-reduce over devices or scan segments)."""
+    n = a.count + b.count
+    # guard the empty-accumulator edge without host branching
+    wb = b.count / jnp.maximum(n, 1.0)
+
+    def mrg(ma, m2a, mb, m2b):
+        delta = mb - ma
+        mean = ma + delta * wb
+        m2 = m2a + m2b + delta * delta * (a.count * wb)
+        return mean, m2
+
+    flat_a, treedef = jax.tree.flatten(a.mean)
+    pairs = [
+        mrg(ma, m2a, mb, m2b)
+        for ma, m2a, mb, m2b in zip(
+            flat_a, jax.tree.leaves(a.m2), jax.tree.leaves(b.mean), jax.tree.leaves(b.m2)
+        )
+    ]
+    return MomentState(
+        count=n,
+        mean=jax.tree.unflatten(treedef, [p[0] for p in pairs]),
+        m2=jax.tree.unflatten(treedef, [p[1] for p in pairs]),
+    )
+
+
+def welford_mean(state: MomentState):
+    return state.mean
+
+
+def welford_var(state: MomentState, ddof: int = 0):
+    """Per-element variance tree.  Returns zeros until count > ddof."""
+    denom = jnp.maximum(state.count - ddof, 1.0)
+    valid = (state.count > ddof).astype(jnp.float32)
+    return jax.tree.map(lambda m2: valid * m2 / denom, state.m2)
+
+
+def welford_std(state: MomentState, ddof: int = 0):
+    return jax.tree.map(jnp.sqrt, welford_var(state, ddof))
+
+
+class ChainSummary(NamedTuple):
+    """Chain-axis pooling of a MomentState whose leaves carry a leading
+    chain axis (time-streamed per chain; pooled across chains here)."""
+
+    pooled_mean: Any  # E over (chains, time), per element
+    pooled_var: Any  # Var over (chains, time) — law of total variance
+    between_chain_var: Any  # Var_k of the per-chain time-means
+    within_chain_var: Any  # E_k of the per-chain time-variances
+
+
+def chain_summary(state: MomentState, ddof: int = 0) -> ChainSummary:
+    var = welford_var(state, ddof)
+
+    def pool(mean, v):
+        pm = jnp.mean(mean, axis=0)
+        between = jnp.var(mean, axis=0)
+        within = jnp.mean(v, axis=0)
+        return pm, within + between, between, within
+
+    flat_mean, treedef = jax.tree.flatten(state.mean)
+    quads = [pool(m, v) for m, v in zip(flat_mean, jax.tree.leaves(var))]
+    unf = lambda i: jax.tree.unflatten(treedef, [q[i] for q in quads])
+    return ChainSummary(
+        pooled_mean=unf(0), pooled_var=unf(1), between_chain_var=unf(2), within_chain_var=unf(3)
+    )

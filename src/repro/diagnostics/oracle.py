@@ -1,0 +1,275 @@
+"""Closed-form stationary moments of the coupled samplers on a Gaussian
+target — exact ground truth for the discrete-time recursions, including
+discretization bias and s-step staleness.
+
+For an isotropic Gaussian target U(θ) = (λ/2)||θ − μ||², every update in
+this repo is an *affine* recursion z' = A z + b + B w (w ~ N(0, I)): each
+scalar parameter dimension evolves independently through the augmented
+state
+
+    z = (θ¹..θᴷ, p¹..pᴷ, c, r, c̃, m̃θ)  ∈ R^{2K+4}
+
+built verbatim from Eq. 6 + the s-periodic stale exchange in
+``repro.core.ec_sghmc`` (c̃/m̃θ refresh with the POST-update center/chain
+mean on steps t with (t+1) % s == 0).  The chain is therefore
+cyclostationary with period s; the moments a trajectory average converges
+to are the PHASE-AVERAGED stationary moments, which we compute exactly:
+
+  1. compose the period map  Φ = A_sync · A_base^{s-1}  and its
+     accumulated process noise Q_Φ,
+  2. solve the discrete Lyapunov equation  Σ₀ = Φ Σ₀ Φᵀ + Q_Φ  (phase-0 =
+     just after a sync),
+  3. roll Σ forward one step at a time through the period and average the
+     θ/p/c marginals over phases.
+
+No small-ε expansion anywhere: what the sampler iterates is what is
+solved, so empirical moments must match to pure Monte-Carlo error.  This
+is the acceptance gate ``tests/test_stationary.py`` checks every sampler
+against.
+
+The fixed point of the noise-free dynamics is θⁱ = c = c̃ = m̃θ = μ,
+p = r = 0, so stationary means are exactly μ (θ, centers) and 0
+(momenta); only covariances need the Lyapunov solve.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import numpy as np
+
+from repro.core.sghmc import _noise_scale
+
+
+class GaussianOracle(NamedTuple):
+    """Stationary moments per scalar parameter dimension."""
+
+    theta_mean: float  # == mu
+    theta_var: float  # Var θⁱ_d, phase- and chain-averaged
+    theta_cross_cov: float  # Cov(θⁱ_d, θʲ_d), i != j (0.0 when K == 1)
+    center_var: float  # Var c_d (0.0 for uncentered samplers)
+    momentum_var: float  # Var pⁱ_d
+    spectral_radius: float  # of the period map; < 1 iff ergodic
+    phase_theta_vars: np.ndarray  # (s,) chain-averaged Var θ at each phase
+
+
+def noise_sigmas(
+    eps: float,
+    friction: float,
+    center_friction: float,
+    temperature: float,
+    noise_convention: str,
+    center_noise_in_p: bool,
+) -> tuple[float, float]:
+    """(σ_p, σ_r) exactly as ``repro.core.ec_sghmc`` computes them — single
+    source of truth via the sampler's own ``_noise_scale``."""
+    t = temperature**0.5
+    sigma_p = t * float(
+        _noise_scale(eps, friction, center_friction if center_noise_in_p else 0.0, noise_convention)
+    )
+    sigma_r = t * float(_noise_scale(eps, center_friction, 0.0, noise_convention))
+    return sigma_p, sigma_r
+
+
+def lyapunov_stationary(A: np.ndarray, Q: np.ndarray) -> np.ndarray:
+    """Solve Σ = A Σ Aᵀ + Q by vectorization (exact for these tiny systems)."""
+    n = A.shape[0]
+    eye = np.eye(n * n)
+    vec = np.linalg.solve(eye - np.kron(A, A), Q.reshape(-1))
+    sigma = vec.reshape(n, n)
+    return 0.5 * (sigma + sigma.T)  # symmetrize away roundoff
+
+
+def ec_sghmc_stationary(
+    *,
+    step_size: float,
+    alpha: float,
+    num_chains: int,
+    friction: float = 1.0,
+    center_friction: float = 1.0,
+    mass: float = 1.0,
+    sync_every: int = 1,
+    temperature: float = 1.0,
+    noise_convention: str = "eq6",
+    center_noise_in_p: bool = True,
+    precision: float = 1.0,
+    mu: float = 0.0,
+) -> GaussianOracle:
+    """Exact stationary moments of ``core.ec_sghmc`` on N(μ, λ⁻¹I) with
+    exact gradients.  α = 0 decouples the chains and reproduces
+    ``sghmc_stationary`` with the matching noise scale."""
+    eps, lam, k, s = float(step_size), float(precision), int(num_chains), int(sync_every)
+    a = eps / mass
+    d_p = 1.0 - eps * friction / mass
+    d_r = 1.0 - eps * center_friction / mass
+    sigma_p, sigma_r = noise_sigmas(
+        eps, friction, center_friction, temperature, noise_convention, center_noise_in_p
+    )
+
+    if alpha == 0.0:
+        # Chains decouple from the center entirely; the center (c, r) becomes
+        # an undamped random walk (no restoring force), so only the θ/p
+        # marginal is stationary — exactly K independent SGHMC chains driven
+        # with the EC noise scale σ_p.
+        A2 = np.array([[1.0, a], [-eps * lam, d_p]])
+        Q2 = np.diag([0.0, sigma_p**2])
+        rad = float(np.max(np.abs(np.linalg.eigvals(A2))))
+        if rad >= 1.0 - 1e-9:
+            raise ValueError(f"chain recursion not contractive (spectral radius {rad:.6f})")
+        sg = lyapunov_stationary(A2, Q2)
+        return GaussianOracle(
+            theta_mean=float(mu),
+            theta_var=float(sg[0, 0]),
+            theta_cross_cov=0.0,
+            center_var=float("inf"),
+            momentum_var=float(sg[1, 1]),
+            spectral_radius=rad,
+            phase_theta_vars=np.full(s, sg[0, 0]),
+        )
+
+    n = 2 * k + 4
+    i_c, i_r, i_cs, i_mt = 2 * k, 2 * k + 1, 2 * k + 2, 2 * k + 3
+
+    A = np.zeros((n, n))
+    for i in range(k):
+        A[i, i] = 1.0  # θⁱ' = θⁱ + a pⁱ
+        A[i, k + i] = a
+        A[k + i, i] = -eps * (lam + alpha)  # pⁱ' = d_p pⁱ - ελθⁱ - εα(θⁱ - c̃)
+        A[k + i, k + i] = d_p
+        A[k + i, i_cs] = eps * alpha
+    A[i_c, i_c] = 1.0  # c' = c + a r
+    A[i_c, i_r] = a
+    A[i_r, i_c] = -eps * alpha  # r' = d_r r - εα(c - m̃θ)
+    A[i_r, i_r] = d_r
+    A[i_r, i_mt] = eps * alpha
+    A_base = A.copy()
+    A_base[i_cs, i_cs] = 1.0  # stale buffers held
+    A_base[i_mt, i_mt] = 1.0
+
+    A_sync = A.copy()
+    A_sync[i_cs, i_c] = 1.0  # c̃' = c' (post-update center)
+    A_sync[i_cs, i_r] = a
+    for i in range(k):  # m̃θ' = mean_i θⁱ' (post-update chains)
+        A_sync[i_mt, i] = 1.0 / k
+        A_sync[i_mt, k + i] = a / k
+
+    Q = np.zeros((n, n))
+    for i in range(k):
+        Q[k + i, k + i] = sigma_p**2
+    Q[i_r, i_r] = sigma_r**2
+
+    # period map and its accumulated noise (steps 1..s; step s syncs)
+    steps = [A_base] * (s - 1) + [A_sync]
+    M = np.eye(n)
+    Q_phi = np.zeros((n, n))
+    for A_j in reversed(steps):
+        Q_phi += M @ Q @ M.T
+        M = M @ A_j
+    phi = M
+
+    rad = float(np.max(np.abs(np.linalg.eigvals(phi))))
+    if rad >= 1.0 - 1e-9:
+        raise ValueError(
+            f"period map not contractive (spectral radius {rad:.6f}) — "
+            "no stationary distribution for these hyperparameters"
+        )
+
+    sigma0 = lyapunov_stationary(phi, Q_phi)
+    phase_sigmas = [sigma0]
+    for A_j in steps[:-1]:
+        prev = phase_sigmas[-1]
+        phase_sigmas.append(A_j @ prev @ A_j.T + Q)
+
+    th = slice(0, k)
+    pp = slice(k, 2 * k)
+    phase_theta_vars = np.array([np.mean(np.diag(sg[th, th])) for sg in phase_sigmas])
+    theta_var = float(phase_theta_vars.mean())
+    if k > 1:
+        off = [
+            (np.sum(sg[th, th]) - np.trace(sg[th, th])) / (k * (k - 1)) for sg in phase_sigmas
+        ]
+        theta_cross_cov = float(np.mean(off))
+    else:
+        theta_cross_cov = 0.0
+    center_var = float(np.mean([sg[i_c, i_c] for sg in phase_sigmas]))
+    momentum_var = float(np.mean([np.mean(np.diag(sg[pp, pp])) for sg in phase_sigmas]))
+    return GaussianOracle(
+        theta_mean=float(mu),
+        theta_var=theta_var,
+        theta_cross_cov=theta_cross_cov,
+        center_var=center_var,
+        momentum_var=momentum_var,
+        spectral_radius=rad,
+        phase_theta_vars=phase_theta_vars,
+    )
+
+
+def sghmc_stationary(
+    *,
+    step_size: float,
+    friction: float = 1.0,
+    mass: float = 1.0,
+    temperature: float = 1.0,
+    noise_convention: str = "eq4",
+    grad_noise_estimate: float = 0.0,
+    precision: float = 1.0,
+    mu: float = 0.0,
+) -> GaussianOracle:
+    """Exact stationary moments of ``core.sghmc`` (Eq. 4 discretized) on
+    N(μ, λ⁻¹I).  As ε → 0 with eq4 noise, θ-variance → 1/λ; the exact
+    discrete value (what a test must compare against) differs at O(ε)."""
+    eps, lam = float(step_size), float(precision)
+    a = eps / mass
+    d_p = 1.0 - eps * friction / mass
+    sigma = temperature**0.5 * float(
+        _noise_scale(eps, friction - grad_noise_estimate, 0.0, noise_convention)
+    )
+    A = np.array([[1.0, a], [-eps * lam, d_p]])
+    Q = np.diag([0.0, sigma**2])
+    rad = float(np.max(np.abs(np.linalg.eigvals(A))))
+    if rad >= 1.0 - 1e-9:
+        raise ValueError(f"SGHMC recursion not contractive (spectral radius {rad:.6f})")
+    sg = lyapunov_stationary(A, Q)
+    return GaussianOracle(
+        theta_mean=float(mu),
+        theta_var=float(sg[0, 0]),
+        theta_cross_cov=0.0,
+        center_var=0.0,
+        momentum_var=float(sg[1, 1]),
+        spectral_radius=rad,
+        phase_theta_vars=np.array([sg[0, 0]]),
+    )
+
+
+def sgld_stationary(
+    *,
+    step_size: float,
+    temperature: float = 1.0,
+    precision: float = 1.0,
+    mu: float = 0.0,
+) -> GaussianOracle:
+    """Exact stationary variance of the SGLD recursion θ' = (1-ελ)θ + ελμ
+    + N(0, 2εT): an AR(1) with Var = 2εT / (1 - (1-ελ)²) = T/λ · 1/(1-ελ/2)."""
+    eps, lam = float(step_size), float(precision)
+    rho = 1.0 - eps * lam
+    if abs(rho) >= 1.0:
+        raise ValueError(f"SGLD recursion not contractive (|1-ελ| = {abs(rho):.6f})")
+    var = 2.0 * eps * temperature / (1.0 - rho * rho)
+    return GaussianOracle(
+        theta_mean=float(mu),
+        theta_var=float(var),
+        theta_cross_cov=0.0,
+        center_var=0.0,
+        momentum_var=0.0,
+        spectral_radius=abs(rho),
+        phase_theta_vars=np.array([var]),
+    )
+
+
+def monte_carlo_tolerance(var: float, ess: float, nsigma: float = 3.0) -> float:
+    """Half-width of an nσ acceptance band for an empirical variance with
+    ``ess`` effectively-independent Gaussian samples: SD(s²) ≈ var·√(2/ess).
+    Shared by the stationary battery so every test states its tolerance the
+    same way."""
+    ess = max(float(ess), 4.0)
+    return nsigma * var * math.sqrt(2.0 / ess)

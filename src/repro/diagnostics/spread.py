@@ -1,0 +1,65 @@
+"""Cross-chain / ensemble dispersion summaries.
+
+Everything here reduces a chain-stacked pytree (leading axis K on every
+leaf) to a handful of scalars — the numbers the serving loop, fig1, and
+the staleness sweep previously each hand-rolled.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def cross_chain_spread(tree) -> jnp.ndarray:
+    """Element-weighted mean over all parameters of the per-element
+    variance across the leading chain axis.  0 ⇔ all chains identical."""
+    num, den = jnp.float32(0.0), 0
+    for leaf in jax.tree.leaves(tree):
+        v = jnp.var(leaf.astype(jnp.float32), axis=0)
+        num = num + jnp.sum(v)
+        den += int(v.size)
+    return num / max(den, 1)
+
+
+def chain_center_rms(tree, center) -> jnp.ndarray:
+    """RMS distance of chains from a center tree (leaves without the chain
+    axis): sqrt(mean_i,elem (θⁱ - c)²) — the elastic-coupling energy scale."""
+    num, den = jnp.float32(0.0), 0
+    for leaf, c in zip(jax.tree.leaves(tree), jax.tree.leaves(center)):
+        d = leaf.astype(jnp.float32) - c.astype(jnp.float32)[None]
+        num = num + jnp.sum(d * d)
+        den += int(d.size)
+    return jnp.sqrt(num / max(den, 1))
+
+
+def ensemble_spread(params_stack) -> dict:
+    """Serving-side ensemble health: how dispersed the K posterior samples
+    actually are (a collapsed ensemble is a silent BMA no-op).
+
+    ``rel_spread`` is scale-free: per-element cross-chain std over the RMS
+    parameter magnitude, so the same physical dispersion reports the same
+    number regardless of model size."""
+    leaves = jax.tree.leaves(params_stack)
+    k = int(leaves[0].shape[0])
+    n_per_chain = max(sum(int(l.size) for l in leaves) // max(k, 1), 1)
+    spread = cross_chain_spread(params_stack)
+    norms = jnp.sqrt(
+        sum(jnp.sum(l.astype(jnp.float32) ** 2, axis=tuple(range(1, l.ndim))) for l in leaves)
+    )  # (K,)
+    rms_param = jnp.mean(norms) / jnp.sqrt(jnp.float32(n_per_chain))
+    return {
+        "num_chains": k,
+        "chain_spread": float(spread),
+        "mean_param_norm": float(jnp.mean(norms)),
+        "rel_spread": float(jnp.sqrt(spread) / jnp.maximum(rms_param, 1e-12)),
+    }
+
+
+def pooled_moments(trajectory) -> tuple[np.ndarray, np.ndarray]:
+    """(mean, var) per trailing dimension of a (chains, samples, *dims)
+    trajectory, pooled over chains and samples — the estimate the
+    stationary battery compares against the oracle."""
+    x = np.asarray(trajectory, np.float64)
+    flat = x.reshape(-1, *x.shape[2:])
+    return flat.mean(axis=0), flat.var(axis=0)

@@ -17,6 +17,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# pallas renamed TPUCompilerParams -> CompilerParams across jax releases;
+# accept either so the kernels track the installed toolchain
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 
 def _scan_block(a, x):
     """Vectorized within-block scan: returns (h_local, cumprod_a).
@@ -67,7 +71,7 @@ def rglru_scan(a, x, h0=None, *, block_r: int = 128, block_s: int = 256, interpr
         out_specs=pl.BlockSpec((1, sblk, rblk), lambda b, r, t: (b, t, r)),
         out_shape=jax.ShapeDtypeStruct((B, S, R), jnp.float32),
         scratch_shapes=[pltpu.VMEM((1, rblk), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

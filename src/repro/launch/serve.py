@@ -16,7 +16,7 @@ import jax.numpy as jnp
 
 from repro import configs
 from repro.models import get_model, init_params
-from repro.serve.loop import make_decode_step, make_prefill_step
+from repro.serve.loop import ensemble_diagnostics, make_decode_step, make_prefill_step
 
 
 def ensemble_decode(cfg, model, params_stack, batch, max_seq: int, num_tokens: int):
@@ -66,6 +66,12 @@ def main(argv=None):
     if args.ensemble > 1:
         keys = jax.random.split(jax.random.PRNGKey(args.seed), args.ensemble)
         params = jax.vmap(lambda k: init_params(model.param_specs(cfg), k))(keys)
+        health = ensemble_diagnostics(params)
+        print(
+            f"ensemble: K={health['num_chains']} spread={health['chain_spread']:.3e} "
+            f"rel={health['rel_spread']:.3e}"
+            + (" [COLLAPSED — BMA is a no-op]" if health["collapsed"] else "")
+        )
         toks = ensemble_decode(cfg, model, params, batch, max_seq, args.gen)
     else:
         params = init_params(model.param_specs(cfg), key)

@@ -181,7 +181,9 @@ def active_params(cfg: ModelConfig) -> int:
 
     specs = registry.get_model(cfg).param_specs(cfg)
     total = 0
-    for path, s in jax.tree.flatten_with_path(
+    # jax.tree.flatten_with_path only exists in newer jax; the tree_util
+    # spelling works everywhere (cf. train/checkpoint.py)
+    for path, s in jax.tree_util.tree_flatten_with_path(
         specs, is_leaf=lambda x: isinstance(x, ParamSpec)
     )[0]:
         n = int(np.prod(s.shape))

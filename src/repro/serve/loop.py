@@ -1,12 +1,18 @@
 """Serving steps: prefill (prompt -> cache) and greedy decode.
 
 ``decode_step``/``serve_step`` is what the decode_* and long_* dry-run cells
-lower: one new token against a KV/recurrent cache of seq_len."""
+lower: one new token against a KV/recurrent cache of seq_len.
+
+``ensemble_diagnostics`` reports the dispersion of a chain-ensemble before
+it serves: a collapsed ensemble (zero spread) silently degrades Bayesian
+model averaging to a single model, and the serving tier is where that must
+be caught."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.diagnostics import ensemble_spread
 from repro.models import ModelDef
 from repro.models.common import ModelConfig
 
@@ -27,6 +33,16 @@ def make_decode_step(cfg: ModelConfig, model: ModelDef):
         return next_tokens, new_cache
 
     return serve_step
+
+
+def ensemble_diagnostics(params_stack, *, min_rel_spread: float = 1e-6) -> dict:
+    """Ensemble-spread health report for a (K, ...)-stacked posterior
+    ensemble about to serve.  Returns the shared spread summary plus a
+    ``collapsed`` flag — K identical samples waste K× serve compute for a
+    single model's predictions."""
+    out = ensemble_spread(params_stack)
+    out["collapsed"] = bool(out["rel_spread"] < min_rel_spread)
+    return out
 
 
 def generate(cfg: ModelConfig, model: ModelDef, params, batch, max_seq: int, num_tokens: int):

@@ -1,0 +1,19 @@
+"""Test-suite bootstrap: make ``python -m pytest`` work from the repo root
+without the ``PYTHONPATH=src`` incantation (which keeps working unchanged —
+duplicate sys.path entries are harmless)."""
+from __future__ import annotations
+
+import pathlib
+import sys
+
+_SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running stationary-battery configs (opt-in via -m slow; "
+        "scripts/ci.sh deselects them by default)",
+    )

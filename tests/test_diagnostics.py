@@ -1,0 +1,304 @@
+"""Unit battery for repro.diagnostics: Welford streaming moments, FFT-ESS /
+split-R̂, the Gaussian-target oracle's self-consistency, sampler stats
+hooks, and spread summaries.  (The oracle-vs-sampler acceptance gate lives
+in tests/test_stationary.py.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro import diagnostics as diag
+
+
+class TestWelford:
+    def _stream(self, xs):
+        st = diag.welford_init(xs[0])
+        for x in xs:
+            st = diag.welford_add(st, x)
+        return st
+
+    def test_matches_numpy(self):
+        xs = np.random.default_rng(0).normal(2.0, 3.0, (500, 7)).astype(np.float32)
+        st = self._stream(list(xs))
+        np.testing.assert_allclose(np.asarray(diag.welford_mean(st)), xs.mean(0), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(diag.welford_var(st)), xs.var(0), rtol=1e-4)
+        np.testing.assert_allclose(
+            np.asarray(diag.welford_var(st, ddof=1)), xs.var(0, ddof=1), rtol=1e-4
+        )
+
+    def test_pytree_structure(self):
+        tree = {"w": jnp.ones((3, 2)), "b": {"x": jnp.arange(4.0)}}
+        st = diag.welford_init(tree)
+        st = diag.welford_add(st, tree)
+        st = diag.welford_add(st, jax.tree.map(lambda x: 3.0 * x, tree))
+        mean = diag.welford_mean(st)
+        assert jax.tree.structure(mean) == jax.tree.structure(tree)
+        np.testing.assert_allclose(np.asarray(mean["w"]), 2.0 * np.ones((3, 2)))
+        np.testing.assert_allclose(np.asarray(diag.welford_var(st)["b"]["x"]),
+                                   np.arange(4.0) ** 2)
+
+    def test_scan_compatible(self):
+        """The accumulator must ride as a lax.scan carry (the streaming
+        use-case: moments over a million steps with O(1) memory)."""
+        samples = jax.random.normal(jax.random.PRNGKey(0), (200, 5))
+
+        def body(st, x):
+            return diag.welford_add(st, x), ()
+
+        st0 = diag.welford_init(samples[0])
+        st, _ = jax.lax.scan(body, st0, samples)
+        ref = np.asarray(samples)
+        np.testing.assert_allclose(np.asarray(diag.welford_mean(st)), ref.mean(0), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(diag.welford_var(st)), ref.var(0), rtol=1e-4)
+
+    def test_merge_equals_whole(self):
+        xs = np.random.default_rng(1).normal(size=(300, 4)).astype(np.float32)
+        a = self._stream(list(xs[:120]))
+        b = self._stream(list(xs[120:]))
+        merged = diag.welford_merge(a, b)
+        whole = self._stream(list(xs))
+        assert float(merged.count) == 300
+        np.testing.assert_allclose(
+            np.asarray(diag.welford_mean(merged)), np.asarray(diag.welford_mean(whole)), rtol=1e-5
+        )
+        np.testing.assert_allclose(
+            np.asarray(diag.welford_var(merged)), np.asarray(diag.welford_var(whole)), rtol=1e-4
+        )
+
+    def test_merge_with_empty(self):
+        xs = [np.float32(v) for v in (1.0, 2.0, 3.0)]
+        st = self._stream(xs)
+        empty = diag.welford_init(xs[0])
+        for m in (diag.welford_merge(st, empty), diag.welford_merge(empty, st)):
+            assert float(m.count) == 3
+            np.testing.assert_allclose(float(diag.welford_mean(m)), 2.0, rtol=1e-6)
+
+    def test_chain_summary_pools_leading_axis(self):
+        """Leaves carry the repo's (K, ...) chain axis; pooled variance must
+        equal the flat variance over (chains x time)."""
+        rng = np.random.default_rng(2)
+        k, t, d = 3, 400, 2
+        xs = rng.normal(size=(t, k, d)).astype(np.float32)
+        xs += rng.normal(size=(1, k, 1)) * 2.0  # distinct per-chain offsets
+        st = self._stream(list(xs))
+        cs = diag.chain_summary(st)
+        flat = xs.transpose(1, 0, 2).reshape(k * t, d)
+        np.testing.assert_allclose(np.asarray(cs.pooled_mean), flat.mean(0), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(cs.pooled_var), flat.var(0), rtol=1e-3)
+        assert np.all(np.asarray(cs.between_chain_var) > np.asarray(cs.within_chain_var) * 0.5)
+
+
+class TestESS:
+    def test_iid_is_about_n(self):
+        x = np.random.default_rng(0).normal(size=(4, 2000))
+        ess = diag.effective_sample_size(x)
+        assert 0.5 * x.size < ess <= 1.6 * x.size
+
+    def test_ar1_matches_theory(self):
+        """AR(1) with coefficient rho has ESS = N (1-rho)/(1+rho)."""
+        rng = np.random.default_rng(1)
+        rho, n, m = 0.9, 50_000, 2
+        x = np.zeros((m, n))
+        for c in range(m):
+            z = rng.normal(size=n)
+            for t in range(1, n):
+                z[t] = rho * z[t - 1] + np.sqrt(1 - rho**2) * z[t]
+            x[c] = z
+        ess = diag.effective_sample_size(x)
+        expected = m * n * (1 - rho) / (1 + rho)
+        assert 0.6 * expected < ess < 1.6 * expected
+
+    def test_disagreeing_chains_deflate_ess(self):
+        rng = np.random.default_rng(2)
+        x = rng.normal(size=(4, 1000))
+        shifted = x + np.array([[0.0], [5.0], [-5.0], [10.0]])
+        assert diag.effective_sample_size(shifted) < 0.05 * diag.effective_sample_size(x)
+
+    def test_constant_chain_no_crash(self):
+        assert diag.effective_sample_size(np.ones((2, 100))) > 0
+
+    def test_coupled_ess_discounts_correlated_chains(self):
+        """Perfectly co-moving chains carry ONE chain of information: the
+        pooled estimator reports ~K x, coupled_ess must not."""
+        rng = np.random.default_rng(8)
+        n, rho = 20_000, 0.8
+        z = rng.normal(size=n)
+        for t in range(1, n):
+            z[t] = rho * z[t - 1] + np.sqrt(1 - rho**2) * z[t]
+        x = np.stack([z] * 4)  # 4 identical "chains"
+        single = diag.effective_sample_size(z)
+        coupled = diag.coupled_ess(x)
+        pooled = diag.effective_sample_size(x)
+        assert coupled == pytest.approx(single, rel=1e-6)
+        assert pooled > 2.5 * coupled  # the overstatement coupled_ess avoids
+
+    def test_nd_shapes(self):
+        x = np.random.default_rng(3).normal(size=(2, 500, 3, 2))
+        ess = diag.effective_sample_size_nd(x)
+        assert ess.shape == (3, 2) and np.all(ess > 0)
+        rh = diag.split_rhat_nd(x)
+        assert rh.shape == (3, 2) and np.all(np.isfinite(rh))
+
+    def test_split_rhat_converged(self):
+        x = np.random.default_rng(4).normal(size=(4, 4000))
+        assert abs(diag.split_rhat(x) - 1.0) < 0.02
+
+    def test_split_rhat_flags_disagreement(self):
+        rng = np.random.default_rng(5)
+        x = rng.normal(size=(4, 1000)) + np.array([[0.0], [3.0], [0.0], [-3.0]])
+        assert diag.split_rhat(x) > 1.5
+
+    def test_split_rhat_frozen_chains(self):
+        """Zero within-half variance: identical constants are vacuously
+        converged; DISTINCT constants must read as divergence, not 1.0."""
+        assert diag.split_rhat(np.ones((3, 100))) == 1.0
+        frozen = np.concatenate([np.zeros((2, 100)), np.ones((2, 100))])
+        assert diag.split_rhat(frozen) == float("inf")
+
+    def test_split_rhat_flags_drift(self):
+        """Split-R̂ (unlike plain R̂) catches a trend WITHIN each chain."""
+        rng = np.random.default_rng(6)
+        n = 2000
+        x = rng.normal(size=(4, n)) + np.linspace(0, 4, n)[None, :]
+        assert diag.split_rhat(x) > 1.2
+
+    def test_autocorrelation_lag0(self):
+        rho = diag.autocorrelation(np.random.default_rng(7).normal(size=(3, 256)))
+        np.testing.assert_allclose(rho[:, 0], 1.0)
+        assert np.all(np.abs(rho[:, 1:]) < 1.0 + 1e-9)
+
+
+class TestOracle:
+    def test_alpha0_equals_independent_sghmc(self):
+        """The acceptance-criteria identity: alpha=0 decouples Eq. 5/6 into
+        K independent SGHMC chains — the oracle must agree EXACTLY."""
+        for conv, cnp in (("eq4", False), ("eq6", False)):
+            ec = diag.ec_sghmc_stationary(
+                step_size=0.1, alpha=0.0, num_chains=4, friction=1.3, sync_every=8,
+                noise_convention=conv, center_noise_in_p=cnp,
+            )
+            sg = diag.sghmc_stationary(step_size=0.1, friction=1.3, noise_convention=conv)
+            assert ec.theta_var == pytest.approx(sg.theta_var, rel=1e-12)
+            assert ec.momentum_var == pytest.approx(sg.momentum_var, rel=1e-12)
+            assert ec.theta_cross_cov == 0.0
+
+    def test_alpha0_sync_period_irrelevant(self):
+        vs = {
+            s: diag.ec_sghmc_stationary(
+                step_size=0.1, alpha=0.0, num_chains=4, sync_every=s
+            ).theta_var
+            for s in (1, 4, 8)
+        }
+        assert vs[1] == pytest.approx(vs[4], rel=1e-12) == pytest.approx(vs[8], rel=1e-12)
+
+    def test_sgld_closed_form(self):
+        eps = 0.05
+        o = diag.sgld_stationary(step_size=eps)
+        assert o.theta_var == pytest.approx(2 * eps / (1 - (1 - eps) ** 2), rel=1e-12)
+
+    def test_small_eps_recovers_target_variance(self):
+        """eq4 noise: as eps -> 0 the discrete chain targets N(mu, 1/lam)."""
+        o = diag.sghmc_stationary(step_size=1e-3, friction=1.0, precision=2.0)
+        assert o.theta_var == pytest.approx(0.5, rel=5e-3)
+        o = diag.sgld_stationary(step_size=1e-3, precision=2.0)
+        assert o.theta_var == pytest.approx(0.5, rel=5e-3)
+
+    def test_coupling_induces_positive_cross_covariance(self):
+        o = diag.ec_sghmc_stationary(step_size=0.1, alpha=1.0, num_chains=4, sync_every=1)
+        assert o.theta_cross_cov > 0.0
+        assert o.theta_var > o.theta_cross_cov
+        assert o.spectral_radius < 1.0
+
+    def test_staleness_ramps_phase_variance(self):
+        """Between syncs the stale center lets chains drift: the per-phase
+        stationary variance must not be constant for s > 1."""
+        o = diag.ec_sghmc_stationary(step_size=0.1, alpha=1.0, num_chains=4, sync_every=8)
+        assert o.phase_theta_vars.shape == (8,)
+        assert np.ptp(o.phase_theta_vars) > 1e-6
+
+    def test_unstable_raises(self):
+        with pytest.raises(ValueError):
+            diag.sghmc_stationary(step_size=3.0, friction=0.1)
+        with pytest.raises(ValueError):
+            diag.sgld_stationary(step_size=2.5)
+
+    def test_lyapunov_solver(self):
+        rng = np.random.default_rng(0)
+        A = 0.9 * np.linalg.qr(rng.normal(size=(5, 5)))[0]  # contraction
+        q = rng.normal(size=(5, 5))
+        Q = q @ q.T
+        sigma = diag.lyapunov_stationary(A, Q)
+        np.testing.assert_allclose(sigma, A @ sigma @ A.T + Q, atol=1e-9)
+
+    def test_noise_sigmas_match_sampler_formula(self):
+        sp, sr = diag.noise_sigmas(0.1, 1.0, 2.0, 1.0, "eq6", True)
+        assert sp == pytest.approx(0.1 * np.sqrt(2 * 3.0), rel=1e-6)
+        assert sr == pytest.approx(0.1 * np.sqrt(2 * 2.0), rel=1e-6)
+        sp4, _ = diag.noise_sigmas(0.1, 1.0, 2.0, 0.25, "eq4", False)
+        assert sp4 == pytest.approx(0.5 * np.sqrt(2 * 0.1), rel=1e-6)
+
+
+class TestSamplerStatsHook:
+    def test_sghmc_stats(self):
+        s = core.sghmc(step_size=1e-2)
+        params = jnp.ones((4, 3))
+        st = s.init(params)
+        out = jax.jit(s.stats)(st, params)
+        assert float(out["momentum_norm"]) == 0.0 and int(out["step"]) == 0
+
+    def test_ec_sghmc_stats_values(self):
+        ec = core.ec_sghmc(step_size=1e-2, alpha=2.0)
+        params = jax.random.normal(jax.random.PRNGKey(0), (4, 8))
+        st = ec.init(params)
+        out = jax.jit(ec.stats)(st, params)
+        # center = chain mean at init, so rms == sqrt(mean (theta - mean)^2)
+        manual = np.sqrt(np.mean((np.asarray(params) - np.asarray(params).mean(0)) ** 2))
+        assert float(out["chain_center_rms"]) == pytest.approx(manual, rel=1e-5)
+        # coupling energy = (1/K) sum_i (alpha/2)||theta^i - c||^2
+        centered = np.asarray(params) - np.asarray(params).mean(0)
+        manual_e = 0.5 * 2.0 * np.sum(centered**2) / 4
+        assert float(out["coupling_energy"]) == pytest.approx(manual_e, rel=1e-4)
+        for v in out.values():
+            assert np.isfinite(float(v))
+
+    def test_ec_sgld_stats(self):
+        ec = core.ec_sgld(step_size=1e-2, alpha=1.0)
+        params = jax.random.normal(jax.random.PRNGKey(1), (3, 5))
+        out = ec.stats(ec.init(params), params)
+        assert set(out) >= {"step", "center_momentum_norm", "chain_center_rms"}
+
+    def test_stateless_samplers_expose_none(self):
+        assert core.sgld(step_size=1e-2).stats is None
+
+
+class TestSpread:
+    def test_cross_chain_spread_matches_numpy(self):
+        tree = {
+            "a": jax.random.normal(jax.random.PRNGKey(0), (4, 3, 2)),
+            "b": jax.random.normal(jax.random.PRNGKey(1), (4, 5)),
+        }
+        got = float(diag.cross_chain_spread(tree))
+        a, b = np.asarray(tree["a"]), np.asarray(tree["b"])
+        want = (a.var(0).sum() + b.var(0).sum()) / (a.var(0).size + b.var(0).size)
+        assert got == pytest.approx(want, rel=1e-5)
+
+    def test_chain_center_rms_matches_numpy(self):
+        chains = jax.random.normal(jax.random.PRNGKey(2), (6, 10))
+        center = jnp.zeros((10,))
+        got = float(diag.chain_center_rms(chains, center))
+        assert got == pytest.approx(np.sqrt(np.mean(np.asarray(chains) ** 2)), rel=1e-5)
+
+    def test_ensemble_spread_keys(self):
+        stack = {"w": jax.random.normal(jax.random.PRNGKey(3), (3, 4, 4))}
+        out = diag.ensemble_spread(stack)
+        assert out["num_chains"] == 3
+        assert out["chain_spread"] > 0 and np.isfinite(out["rel_spread"])
+        collapsed = {"w": jnp.broadcast_to(stack["w"][:1], (3, 4, 4))}
+        assert diag.ensemble_spread(collapsed)["chain_spread"] < 1e-10
+
+    def test_pooled_moments(self):
+        x = np.random.default_rng(4).normal(size=(3, 100, 2))
+        m, v = diag.pooled_moments(x)
+        np.testing.assert_allclose(m, x.reshape(-1, 2).mean(0))
+        np.testing.assert_allclose(v, x.reshape(-1, 2).var(0))

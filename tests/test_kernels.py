@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from util import import_hypothesis
+
+given, settings, st = import_hypothesis()  # deterministic tests run bare
 
 from repro.kernels import flash_attention, fused_ec_update, rglru_scan
 from repro.kernels import ref

@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from util import import_hypothesis
+
+given, settings, st = import_hypothesis()  # deterministic tests run bare
 
 from repro import configs
 from repro.models import get_model, init_params, layers as L

@@ -1,0 +1,289 @@
+"""Exact-distribution stationary battery: every sampler's empirical
+moments on a Gaussian target are gated against the CLOSED-FORM oracle for
+the discrete-time recursion (repro.diagnostics.oracle) — not against the
+continuum limit, so there is no discretization slack to hide behind.
+
+Tolerances are pure Monte-Carlo: 3σ bands sized from the empirical ESS,
+computed CONSERVATIVELY on the chain-mean series (treating the K coupled
+chains as fully correlated), plus a safety floor.  Every config uses a
+fixed seed, so failures are deterministic, and a failure means the sampler
+does not draw from the distribution the math says it draws from.
+
+This file is the acceptance gate future perf/sharding PRs run against:
+change the update rule, and the oracle will notice.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro import diagnostics as diag
+
+MU = 1.5  # per-dimension target mean (non-zero to catch mean bugs)
+LAM = 1.0  # target precision: U = (lam/2)||theta - mu||^2
+D = 2  # parameter dimensions (iid under the isotropic target)
+
+
+def run_chains(sampler, shape, steps, burn, seed=0):
+    """Drive a sampler with exact gradients; return (K, T, D) trajectory
+    (K=1 axis inserted for unstacked samplers).  Moments are ALSO streamed
+    through the Welford accumulator inside the scan and cross-checked, so
+    the battery exercises the streaming path every run."""
+    params0 = jnp.full(shape, MU + 1.0, jnp.float32)  # off-target start
+    state0 = sampler.init(params0)
+
+    def body(carry, key):
+        p, st, wf = carry
+        g = LAM * (p - MU)
+        upd, st = sampler.update(g, st, params=p, rng=key)
+        p = core.apply_updates(p, upd)
+        return (p, st, diag.welford_add(wf, p)), p
+
+    @jax.jit
+    def run(keys):
+        wf0 = diag.welford_init(params0)
+        return jax.lax.scan(body, (params0, state0, wf0), keys)
+
+    keys = jax.random.split(jax.random.PRNGKey(seed), steps)
+    (_, _, wf), traj = run(keys)
+    traj = np.asarray(traj)  # (steps, *shape)
+
+    # Welford over the full run must equal the trajectory moments exactly
+    # (the scan-streaming path is what big runs use instead of a trajectory).
+    np.testing.assert_allclose(
+        np.asarray(diag.welford_mean(wf)), traj.mean(axis=0), rtol=2e-4, atol=2e-4
+    )
+    np.testing.assert_allclose(
+        np.asarray(diag.welford_var(wf)), traj.var(axis=0), rtol=2e-3, atol=2e-4
+    )
+
+    traj = traj[burn:]
+    if traj.ndim == 2:  # (T, D) -> (1, T, D)
+        return traj[None]
+    return np.moveaxis(traj, 1, 0)  # (T, K, D) -> (K, T, D)
+
+
+def conservative_ess(traj):
+    """Conservative coupled-chain ESS (chain-mean series), summed over
+    dims — treats the K chains as fully correlated, which lower-bounds the
+    information and therefore widens the tolerance bands."""
+    return float(np.sum(diag.coupled_ess_nd(traj)))
+
+
+def assert_matches_oracle(traj, oracle, *, check_cross=False, label=""):
+    emp_mean, emp_var = diag.pooled_moments(traj)  # (D,), (D,)
+    ess = conservative_ess(traj)
+
+    mean_tol = 3.0 * np.sqrt(oracle.theta_var / ess) + 1e-4
+    assert abs(emp_mean.mean() - oracle.theta_mean) < mean_tol, (
+        f"{label}: mean {emp_mean.mean():.5f} vs oracle {oracle.theta_mean} "
+        f"(tol {mean_tol:.5f}, ess {ess:.0f})"
+    )
+
+    var_tol = diag.monte_carlo_tolerance(oracle.theta_var, ess) + 1e-6
+    assert abs(emp_var.mean() - oracle.theta_var) < var_tol, (
+        f"{label}: var {emp_var.mean():.6f} vs oracle {oracle.theta_var:.6f} "
+        f"(tol {var_tol:.6f}, ess {ess:.0f})"
+    )
+
+    if check_cross and traj.shape[0] > 1:
+        k = traj.shape[0]
+        pairs = [
+            np.mean((traj[i] - emp_mean) * (traj[j] - emp_mean))
+            for i in range(k)
+            for j in range(i + 1, k)
+        ]
+        emp_cross = float(np.mean(pairs))
+        cross_tol = 3.0 * np.sqrt(
+            (oracle.theta_var**2 + oracle.theta_cross_cov**2) / max(ess, 4.0)
+        ) + 1e-6
+        assert abs(emp_cross - oracle.theta_cross_cov) < cross_tol, (
+            f"{label}: cross-cov {emp_cross:.6f} vs oracle {oracle.theta_cross_cov:.6f} "
+            f"(tol {cross_tol:.6f})"
+        )
+
+    # convergence hygiene: the battery's own split-R̂ must be clean
+    rhat = float(np.max(diag.split_rhat_nd(traj)))
+    assert rhat < 1.05, f"{label}: split-Rhat {rhat:.3f} — trajectory not stationary"
+
+
+class TestSGHMCStationary:
+    def test_eq4(self):
+        s = core.sghmc(step_size=0.1, friction=1.0)
+        traj = run_chains(s, (4, D), steps=30_000, burn=2_000)
+        oracle = diag.sghmc_stationary(
+            step_size=0.1, friction=1.0, noise_convention="eq4", precision=LAM, mu=MU
+        )
+        assert_matches_oracle(traj, oracle, label="sghmc-eq4")
+
+    def test_eq6(self):
+        s = core.sghmc(step_size=0.1, friction=1.5, noise_convention="eq6")
+        traj = run_chains(s, (4, D), steps=30_000, burn=2_000, seed=1)
+        oracle = diag.sghmc_stationary(
+            step_size=0.1, friction=1.5, noise_convention="eq6", precision=LAM, mu=MU
+        )
+        assert_matches_oracle(traj, oracle, label="sghmc-eq6")
+
+    @pytest.mark.slow
+    def test_cold_temperature(self):
+        s = core.sghmc(step_size=0.1, friction=1.0, temperature=0.25)
+        traj = run_chains(s, (4, D), steps=40_000, burn=2_000, seed=2)
+        oracle = diag.sghmc_stationary(
+            step_size=0.1, friction=1.0, temperature=0.25, precision=LAM, mu=MU
+        )
+        assert_matches_oracle(traj, oracle, label="sghmc-cold")
+
+
+class TestSGLDStationary:
+    def test_default(self):
+        s = core.sgld(step_size=0.1)
+        traj = run_chains(s, (4, D), steps=30_000, burn=2_000)
+        oracle = diag.sgld_stationary(step_size=0.1, precision=LAM, mu=MU)
+        assert_matches_oracle(traj, oracle, label="sgld")
+
+
+# the acceptance grid: alpha in {0, 1} x sync_every in {1, 8}; eq6 noise,
+# center staleness noise excluded so alpha=0 is EXACTLY independent SGHMC
+EC_KW = dict(friction=1.0, center_friction=1.0, noise_convention="eq6",
+             center_noise_in_p=False)
+K = 4
+
+
+def _ec_case(alpha, s, *, fused=False, steps=40_000, seed=None):
+    eps = 0.1
+    sampler = core.ec_sghmc(step_size=eps, alpha=alpha, sync_every=s, fused=fused, **EC_KW)
+    seed = seed if seed is not None else int(17 * alpha + s + 100 * fused)
+    traj = run_chains(sampler, (K, D), steps=steps, burn=4_000, seed=seed)
+    oracle = diag.ec_sghmc_stationary(
+        step_size=eps, alpha=alpha, num_chains=K, sync_every=s, precision=LAM, mu=MU,
+        **EC_KW,
+    )
+    return traj, oracle
+
+
+class TestECSGHMCStationary:
+    @pytest.mark.parametrize("s", [1, 8])
+    def test_alpha0_recovers_independent_sghmc(self, s):
+        """Acceptance criterion: alpha=0 must reproduce independent-SGHMC
+        moments — both in the oracle (exact identity) and empirically."""
+        traj, oracle = _ec_case(0.0, s)
+        sg = diag.sghmc_stationary(
+            step_size=0.1, friction=1.0, noise_convention="eq6", precision=LAM, mu=MU
+        )
+        assert oracle.theta_var == pytest.approx(sg.theta_var, rel=1e-12)
+        assert_matches_oracle(traj, oracle, label=f"ec-a0-s{s}")
+
+    @pytest.mark.parametrize("s", [1, 8])
+    def test_alpha1(self, s):
+        traj, oracle = _ec_case(1.0, s)
+        assert_matches_oracle(traj, oracle, check_cross=True, label=f"ec-a1-s{s}")
+
+    @pytest.mark.slow
+    def test_alpha1_s4(self):
+        traj, oracle = _ec_case(1.0, 4)
+        assert_matches_oracle(traj, oracle, check_cross=True, label="ec-a1-s4")
+
+    @pytest.mark.slow
+    def test_eq4_convention(self):
+        """The staleness-sweep configuration (eq4 noise, weaker coupling)."""
+        kw = dict(friction=1.0, center_friction=1.0, noise_convention="eq4",
+                  center_noise_in_p=False)
+        sampler = core.ec_sghmc(step_size=0.1, alpha=0.5, sync_every=4, **kw)
+        traj = run_chains(sampler, (K, D), steps=40_000, burn=4_000, seed=7)
+        oracle = diag.ec_sghmc_stationary(
+            step_size=0.1, alpha=0.5, num_chains=K, sync_every=4, precision=LAM, mu=MU, **kw
+        )
+        assert_matches_oracle(traj, oracle, check_cross=True, label="ec-eq4")
+
+    @pytest.mark.slow
+    def test_phase_resolved_variance(self):
+        """The cyclostationary fingerprint: variance ramps between syncs and
+        snaps back at the exchange — phase-resolved match against the
+        oracle's per-phase solution."""
+        s = 8
+        traj, oracle = _ec_case(1.0, s, steps=80_000, seed=11)
+        t = traj.shape[1]
+        t = t - t % s
+        ess_phase = conservative_ess(traj) / s
+        # trajectory index i holds theta_{burn+i+1}; phase = (burn+i+1) % s
+        burn = 4_000
+        for phase in range(s):
+            offset = (phase - burn - 1) % s
+            sel = traj[:, offset:t:s, :]
+            emp = float(sel.var())
+            want = float(oracle.phase_theta_vars[phase])
+            tol = diag.monte_carlo_tolerance(want, ess_phase) + 1e-6
+            assert abs(emp - want) < tol, (
+                f"phase {phase}: var {emp:.6f} vs oracle {want:.6f} (tol {tol:.6f})"
+            )
+        assert np.ptp(oracle.phase_theta_vars) > 3 * 1e-4  # the ramp is resolvable
+
+
+class TestFusedECSGHMCStationary:
+    """Same dynamics through the Pallas kernel (interpret mode on CPU):
+    Box-Muller counter noise + fused update must hit the same oracle."""
+
+    def test_alpha1_s1_fused(self):
+        traj, oracle = _ec_case(1.0, 1, fused=True, steps=30_000)
+        assert_matches_oracle(traj, oracle, check_cross=True, label="ec-fused-a1-s1")
+
+    @pytest.mark.slow
+    def test_alpha1_s8_fused(self):
+        traj, oracle = _ec_case(1.0, 8, fused=True, steps=30_000)
+        assert_matches_oracle(traj, oracle, check_cross=True, label="ec-fused-a1-s8")
+
+    @pytest.mark.slow
+    def test_alpha0_s1_fused_matches_sghmc_oracle(self):
+        traj, oracle = _ec_case(0.0, 1, fused=True, steps=30_000)
+        assert_matches_oracle(traj, oracle, label="ec-fused-a0-s1")
+
+
+class TestResampleChainFromCenter:
+    """Satellite: the elastic-K chain-recovery path draws from the
+    stationary conditional theta^i | c ~ N(c, (K/alpha) I)."""
+
+    def test_moments_and_shapes(self):
+        alpha, k_new = 2.0, 6
+        ec = core.ec_sghmc(step_size=1e-2, alpha=alpha)
+        params = jax.random.normal(jax.random.PRNGKey(0), (4, 2000))
+        st = ec.init(params)
+        new_params, new_state = core.resample_chain_from_center(
+            st, alpha=alpha, rng=jax.random.PRNGKey(1), num_chains=k_new
+        )
+        draws = np.asarray(new_params)  # (k_new, 2000)
+        center = np.asarray(st.center)
+
+        assert draws.shape == (k_new, 2000)
+        var_target = k_new / alpha
+        n = draws.size
+        # per-coordinate mean of the k_new draws: E|err| = sqrt(2 var / (pi k))
+        mean_err = np.abs(draws.mean(axis=0) - center).mean()
+        assert mean_err < 2.0 * np.sqrt(var_target / k_new)
+        centered = draws - center[None]
+        assert abs(centered.mean()) < 4 * np.sqrt(var_target / n)
+        # variance K/alpha: 3σ band for a chi^2 with n dof
+        assert abs(centered.var() - var_target) < 3 * var_target * np.sqrt(2 / n)
+
+    def test_state_shape_consistency(self):
+        """Returned state must be consistent with the NEW chain count while
+        keeping center buffers at their (chain-free) shapes."""
+        ec = core.ec_sghmc(step_size=1e-2, alpha=1.0)
+        params = jax.random.normal(jax.random.PRNGKey(2), (4, 8))
+        st = ec.init(params)
+        for k_new in (4, 6, 2):
+            new_params, new_state = core.resample_chain_from_center(
+                st, alpha=1.0, rng=jax.random.PRNGKey(3), num_chains=k_new
+            )
+            assert new_params.shape == (k_new, 8)
+            assert new_state.momentum.shape == (k_new, 8)
+            assert new_state.center.shape == (8,)
+            assert new_state.center_stale.shape == (8,)
+            assert new_state.mean_theta_stale.shape == (8,)
+            np.testing.assert_allclose(
+                np.asarray(new_state.mean_theta_stale),
+                np.asarray(new_params).mean(0),
+                atol=1e-5,
+            )
+            # fresh chains start with zero momentum
+            assert float(jnp.abs(new_state.momentum).max()) == 0.0
