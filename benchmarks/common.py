@@ -1,4 +1,11 @@
-"""Shared benchmark utilities."""
+"""Shared benchmark utilities.
+
+``emit`` keeps printing the historical ``name,us_per_call,derived`` CSV to
+stdout AND records every row in-process; ``benchmarks/run.py`` dumps the
+rows (plus whatever structured payloads benches ``record``) as
+``BENCH_<name>.json`` so the perf trajectory is machine-readable across
+PRs.
+"""
 from __future__ import annotations
 
 import os
@@ -8,6 +15,21 @@ import jax
 import numpy as np
 
 QUICK = os.environ.get("REPRO_BENCH_QUICK", "1") == "1"
+
+# rows/payloads accumulated since the last reset (one bench module's worth)
+ROWS: list[dict] = []
+EXTRAS: dict = {}
+
+
+def reset_records() -> None:
+    ROWS.clear()
+    EXTRAS.clear()
+
+
+def record(key: str, payload) -> None:
+    """Attach a structured payload (steps/s, ESS/s, config, ...) to the
+    current bench's JSON artifact."""
+    EXTRAS[key] = payload
 
 
 def time_fn(fn, *args, iters: int = 20, warmup: int = 3):
@@ -26,3 +48,4 @@ def time_fn(fn, *args, iters: int = 20, warmup: int = 3):
 
 def emit(name: str, us_per_call: float, derived):
     print(f"{name},{us_per_call:.1f},{derived}")
+    ROWS.append({"name": name, "us_per_call": round(float(us_per_call), 3), "derived": derived})

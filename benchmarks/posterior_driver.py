@@ -5,6 +5,13 @@ Metric identical to the paper: negative log likelihood of the *posterior
 predictive* on held-out data, over sampling steps.  For parallel samplers
 the predictive averages over all K chains (Bayesian model averaging) —
 that, not single-chain quality, is what a sampler earns its keep for.
+
+The step loop is device-resident: ``repro.run.ChainExecutor`` scans whole
+``eval_every``-sized chunks as one compiled program (sampler mode, so
+approach-I samplers get their gradients at the stale snapshots), with the
+Welford moments and the streaming batch-means ESS riding the scan carry.
+The host only touches the chain at eval boundaries — predictive NLL,
+probe collection and checkpointable state all live there.
 """
 from __future__ import annotations
 
@@ -17,6 +24,7 @@ import math
 from repro import core
 from repro import diagnostics as diag
 from repro.data.pipeline import ShardedLoader
+from repro.run import ChainExecutor
 
 
 def sgd_map(lr: float, beta: float = 0.9):
@@ -48,33 +56,27 @@ def run_sampling(
 ):
     """When ``collect_diagnostics`` is set, additionally returns a dict of
     shared convergence diagnostics (repro.diagnostics): post-burn-in probe
-    ESS / split-R̂, streaming parameter moments, cross-chain spread, and the
-    sampler's own stats hook — the machinery benchmarks previously
-    hand-rolled per script."""
+    ESS / split-R̂ (FFT, from the thinned probe trace) and their streaming
+    batch-means counterpart straight out of the scan carry, parameter
+    moments, cross-chain spread, and the sampler's own stats hook."""
     prior = core.gaussian_prior(weight_decay)
     pot = core.make_potential(nll_fn, n_data=n_data, prior=prior)
     params1 = init_params_fn(jax.random.PRNGKey(seed))
-    stacked = num_chains > 1 or sampler.grad_targets is not None
     if num_chains > 1:
         params = core.tree_broadcast_axis0(params1, num_chains)
     else:
         params = params1
     state = sampler.init(params)
-    loader = ShardedLoader(train[0], train[1], batch_size, num_chains, seed)
     xt, yt = jnp.asarray(test[0]), jnp.asarray(test[1])
 
-    grad_pot = jax.vmap(pot.grad) if num_chains > 1 else pot.grad
-
-    @jax.jit
-    def step_fn(params, state, batch, key):
-        targets = sampler.grad_targets(state, params) if sampler.grad_targets else params
-        if sampler.grad_targets is not None and num_chains == 1:
-            # async sampler: targets carry a worker axis; batch needs one too
-            g = jax.vmap(pot.grad)(targets, batch)
-        else:
-            g = grad_pot(targets, batch)
-        upd, state = sampler.update(g, state, params=params, rng=key)
-        return core.apply_updates(params, upd), state
+    # async samplers (grad_targets, single server chain) evaluate gradients
+    # at K stacked worker snapshots — their batches carry the worker axis
+    stacked_grads = num_chains > 1 or sampler.grad_targets is not None
+    k_batch = num_chains
+    if sampler.grad_targets is not None and num_chains == 1:
+        k_batch = jax.tree.leaves(state.snapshots)[0].shape[0]
+    loader = ShardedLoader(train[0], train[1], batch_size, k_batch, seed)
+    grad_fn_inner = jax.vmap(pot.grad) if stacked_grads else pot.grad
 
     @jax.jit
     def predictive_nll(prob_sum, n_models):
@@ -90,7 +92,6 @@ def run_sampling(
             return jnp.sum(jax.vmap(f)(params), axis=0)
         return f(params)
 
-    @jax.jit
     def probe_fn(params):
         """First few coordinates of the first leaf, per chain — the scalar
         series the ESS / R̂ estimators run on."""
@@ -98,41 +99,48 @@ def run_sampling(
         k = leaf.shape[0] if num_chains > 1 else 1
         return leaf.reshape(k, -1)[:, :4]
 
-    wf_add = jax.jit(diag.welford_add)
-
-    key = jax.random.PRNGKey(seed + 1)
-    curve = []
-    probes = []
-    wf = None
-    prob_sum = jnp.zeros((xt.shape[0], 10), jnp.float32)
-    n_acc = 0
     burnin = int(steps * burnin_frac)
-    for t in range(steps):
-        batch = loader.batch(t)
-        if sampler.grad_targets is not None and num_chains == 1:
-            # async needs K worker batches
-            k_workers = jax.tree.leaves(state.snapshots)[0].shape[0]
-            wl = ShardedLoader(train[0], train[1], batch_size, k_workers, seed)
-            batch = wl.batch(t)
-        key, sub = jax.random.split(key)
-        params, state = step_fn(params, state, batch, sub)
-        if collect_diagnostics and t >= burnin:
-            probes.append(probe_fn(params))
-            wf = wf_add(wf, params) if wf is not None else wf_add(diag.welford_init(params), params)
-        if (t + 1) % eval_every == 0:
-            if t >= burnin:  # accumulate posterior-predictive after burn-in
-                prob_sum = prob_sum + chain_probs(params)
-                n_acc += num_chains
-            cur = chain_probs(params)
-            nll_now = float(predictive_nll(cur, num_chains))
-            nll_avg = float(predictive_nll(prob_sum, max(n_acc, 1))) if n_acc else nll_now
-            curve.append({"step": t + 1, "nll": nll_now, "nll_bma": nll_avg})
+    executor = ChainExecutor(
+        sampler=sampler,
+        grad_fn=lambda targets, batch: grad_fn_inner(targets, batch),
+        batch_fn=loader.batch,
+        trace_fn=probe_fn if collect_diagnostics else None,
+        moments=collect_diagnostics,
+        moments_from=burnin,
+        ess_probe_fn=probe_fn if collect_diagnostics else None,
+        ess_batch_len=max(int(math.sqrt(max(steps - burnin, 1))), 8),
+        chunk_steps=eval_every,
+        key_mode="carry",
+    )
+
+    curve = []
+    eval_state = {"prob_sum": jnp.zeros((xt.shape[0], 10), jnp.float32), "n_acc": 0}
+
+    def on_chunk(step_end, params, state, outs):
+        if step_end % eval_every != 0:
+            return
+        if step_end - 1 >= burnin:  # accumulate posterior predictive after burn-in
+            eval_state["prob_sum"] = eval_state["prob_sum"] + chain_probs(params)
+            eval_state["n_acc"] += num_chains
+        cur = chain_probs(params)
+        nll_now = float(predictive_nll(cur, num_chains))
+        n_acc = eval_state["n_acc"]
+        nll_avg = float(predictive_nll(eval_state["prob_sum"], max(n_acc, 1))) if n_acc else nll_now
+        curve.append({"step": step_end, "nll": nll_now, "nll_bma": nll_avg})
+
+    result = executor.run(
+        params, state,
+        num_steps=steps,
+        key=jax.random.PRNGKey(seed + 1),
+        on_chunk=on_chunk,
+    )
+    params, state = result.params, result.state
     if not collect_diagnostics:
         return params, curve
 
-    chains = np.moveaxis(np.asarray(jnp.stack(probes)), 1, 0)  # (K, T', 4)
+    chains = np.moveaxis(np.asarray(result.trace)[burnin:], 1, 0)  # (K, T', 4)
     # element-weighted mean variance (same convention as cross_chain_spread)
-    var_leaves = jax.tree.leaves(diag.welford_var(wf))
+    var_leaves = jax.tree.leaves(diag.welford_var(result.moments))
     param_var = float(
         sum(float(jnp.sum(v)) for v in var_leaves)
         / max(sum(int(v.size) for v in var_leaves), 1)
@@ -143,8 +151,11 @@ def run_sampling(
         "probe_ess": float(np.sum(diag.effective_sample_size_nd(chains))),
         "probe_ess_chain_mean": float(np.sum(diag.coupled_ess_nd(chains))),
         "probe_split_rhat": float(np.max(diag.split_rhat_nd(chains))),
+        # straight out of the scan carry — zero host syncs during sampling
+        "probe_ess_streaming": float(np.sum(np.asarray(diag.batch_ess_estimate(result.ess)))),
         "param_var": param_var,
         "chain_spread": float(diag.cross_chain_spread(params)) if num_chains > 1 else 0.0,
+        "steps_per_s": result.steps_per_s,
     }
     if sampler.stats is not None:
         info["sampler_stats"] = {

@@ -1,5 +1,7 @@
 """Benchmark harness — one module per paper figure/table + system benches.
-Prints ``name,us_per_call,derived`` CSV.  REPRO_BENCH_QUICK=0 for the full
+Prints ``name,us_per_call,derived`` CSV and writes a machine-readable
+``BENCH_<name>.json`` per bench (rows + structured extras + config) so the
+perf trajectory is tracked across PRs.  REPRO_BENCH_QUICK=0 for the full
 paper-scale configurations (QUICK keeps the CPU-only run in minutes).
 
   PYTHONPATH=src python -m benchmarks.run [--bench fig1_toy ...]
@@ -7,6 +9,8 @@ paper-scale configurations (QUICK keeps the CPU-only run in minutes).
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import time
 import traceback
@@ -14,19 +18,58 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent))
 
+ROOT = Path(__file__).resolve().parent.parent
+
 BENCHES = {
     "fig1_toy": "fig1_toy_gaussian",  # paper Fig. 1
     "fig2_mlp": "fig2_mnist_mlp",  # paper Fig. 2 left
     "fig2_resnet": "fig2_cifar_resnet",  # paper Fig. 2 right
     "staleness": "staleness_sweep",  # paper §2 analysis
-    "overhead": "sampler_overhead",  # sampler hot-loop + fused kernel
+    "overhead": "sampler_overhead",  # sampler hot-loop + executor + fused kernel
     "roofline": "roofline",  # deliverable (g), reads dry-run artifacts
 }
+
+# historical artifact names (ISSUE 4): fig1_toy -> BENCH_fig1.json
+JSON_NAMES = {"fig1_toy": "fig1"}
+
+
+def _config() -> dict:
+    import jax
+
+    import common
+
+    return {
+        "quick": common.QUICK,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "jax": jax.__version__,
+        "python": platform.python_version(),
+    }
+
+
+def _write_json(name: str, extra, seconds: float) -> None:
+    import common
+
+    payload = {
+        "bench": name,
+        "config": _config(),
+        "wall_s": round(seconds, 2),
+        "rows": list(common.ROWS),
+        **{k: v for k, v in common.EXTRAS.items()},
+    }
+    if isinstance(extra, dict):
+        payload["summary"] = {
+            k: v for k, v in extra.items() if isinstance(v, (int, float, str, bool))
+        }
+    path = ROOT / f"BENCH_{JSON_NAMES.get(name, name)}.json"
+    path.write_text(json.dumps(payload, indent=1, sort_keys=True) + "\n")
+    print(f"# wrote {path.name}", flush=True)
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--bench", nargs="*", default=list(BENCHES), choices=list(BENCHES))
+    ap.add_argument("--no-json", action="store_true", help="skip BENCH_*.json artifacts")
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     failures = []
@@ -34,9 +77,15 @@ def main(argv=None) -> None:
         mod_name = BENCHES[name]
         t0 = time.time()
         try:
+            import common
+
+            common.reset_records()
             mod = __import__(mod_name)
-            mod.run()
-            print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+            extra = mod.run()
+            dt = time.time() - t0
+            if not args.no_json:
+                _write_json(name, extra, dt)
+            print(f"# {name} done in {dt:.1f}s", flush=True)
         except Exception as e:
             failures.append(name)
             print(f"# {name} FAILED: {e!r}", flush=True)

@@ -6,7 +6,15 @@ scheme; growing s hurts Async SGHMC much more than EC-SGHMC.
 
 Mixing diagnostics (probe ESS, split-R̂, cross-chain spread) come from the
 shared ``repro.diagnostics`` subsystem via the posterior driver — staleness
-should depress the naive scheme's ESS before it shows in final NLL."""
+should depress the naive scheme's ESS before it shows in final NLL.
+
+Execution: every (scheme, s) cell runs DEVICE-RESIDENT through the
+posterior driver's ``ChainExecutor`` (whole eval intervals as one scan
+program, moments/ESS in the carry).  The ladder itself stays a Python loop
+by necessity, not laziness: ``sync_every`` and the async worker phases are
+STRUCTURAL hyperparameters — they change the compiled program (DESIGN.md
+§3) — so the s-axis cannot ride the executor's vmapped sweep axis the way
+the (alpha, step_size) grids in ``sampler_overhead`` do."""
 from __future__ import annotations
 
 import time
@@ -17,7 +25,7 @@ from repro import core
 from repro.data import synthetic_mnist
 from repro.models import mlp, init_params
 
-from common import QUICK, emit
+from common import QUICK, emit, record
 from posterior_driver import run_sampling, sgd_map
 
 K = 6
@@ -35,6 +43,7 @@ def run():
     init_fn = lambda rng: init_params(specs, rng)
 
     out = {}
+    perf = {}
     for s in svals:
         for name, (sampler, chains) in {
             f"async_s{s}": (
@@ -54,6 +63,13 @@ def run():
             )
             dt = time.time() - t0
             out[name] = curve[-1]["nll"]
+            perf[name] = {
+                "steps_per_s": info["steps_per_s"],
+                "final_nll": curve[-1]["nll"],
+                "probe_ess_chain_mean": info["probe_ess_chain_mean"],
+            }
+            emit(f"staleness/{name}_steps_per_s", 1e6 / max(info["steps_per_s"], 1e-9),
+                 f"{info['steps_per_s']:.1f}")
             emit(f"staleness/{name}_final_nll", 1e6 * dt / steps, f"{curve[-1]['nll']:.4f}")
             emit(f"staleness/{name}_probe_ess_chain_mean", 1e6 * dt / steps,
                  f"{info['probe_ess_chain_mean']:.0f}")
@@ -69,6 +85,9 @@ def run():
     emit("staleness/async_degradation", 0, f"{d_async:.4f}")
     emit("staleness/ec_degradation", 0, f"{d_ec:.4f}")
     emit("staleness/claim_ec_buffers_staleness", 0, "CONFIRMED" if d_ec <= d_async + 1e-4 else "REFUTED")
+    record("perf", {"cells": perf,
+                    "config": {"steps": steps, "chains": K, "svals": list(svals),
+                               "hidden": hidden, "quick": QUICK}})
     return out
 
 

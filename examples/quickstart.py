@@ -1,5 +1,8 @@
 """Quickstart: elastically-coupled SG-MCMC on a 2-D Gaussian (paper Fig. 1).
 
+The whole run executes device-resident through ``repro.run.rollout`` — the
+same chunked-scan executor every driver in this repo uses.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
@@ -7,6 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import core
+from repro.run import rollout
 
 MU = jnp.array([2.0, -1.0])
 K, STEPS = 4, 800
@@ -20,22 +24,14 @@ def main():
     # K chains, coupled through a center variable, syncing every 4 steps
     sampler = core.ec_sghmc(step_size=5e-2, alpha=1.0, sync_every=4,
                             noise_convention="eq4", center_noise_in_p=False)
-    params = jnp.zeros((K, 2))
-    state = sampler.init(params)
-
-    def body(carry, key):
-        p, st = carry
-        updates, st = sampler.update(grad_U(p), st, params=p, rng=key)
-        p = core.apply_updates(p, updates)
-        return (p, st), p
-
     keys = jax.random.split(jax.random.PRNGKey(0), STEPS)
-    (_, state), traj = jax.lax.scan(body, (params, state), keys)
-    samples = np.asarray(traj[STEPS // 4 :]).reshape(-1, 2)
+    res = rollout(sampler, grad_U, jnp.zeros((K, 2)), num_steps=STEPS,
+                  keys=keys, moments=False)
+    samples = np.asarray(res.trace)[STEPS // 4 :].reshape(-1, 2)
 
     print(f"target  mean: {np.asarray(MU)}          target  var: [1. 1.]")
     print(f"sampled mean: {samples.mean(0).round(3)}   sampled var: {samples.var(0).round(3)}")
-    print(f"center ended at: {np.asarray(state.center).round(3)}")
+    print(f"center ended at: {np.asarray(res.state.center).round(3)}")
 
     # ASCII density plot
     H, xe, ye = np.histogram2d(samples[:, 0], samples[:, 1], bins=(24, 12),

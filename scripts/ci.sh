@@ -1,11 +1,12 @@
 #!/usr/bin/env bash
 # CI entry point.
 #
-#   scripts/ci.sh            tier-1 suite with the slow stationary configs
-#                            deselected (~10 min on CPU — dominated by the
-#                            pre-existing arch/dryrun smoke suites, not the
-#                            stationary battery)
+#   scripts/ci.sh            lint (if ruff is installed) + tier-1 suite with
+#                            the slow stationary configs deselected (~10 min
+#                            on CPU) + an overhead-bench smoke run that
+#                            regenerates BENCH_overhead.json
 #   RUN_SLOW=1 scripts/ci.sh ...then the slow stationary battery on top
+#   SKIP_BENCH=1 scripts/ci.sh  skip the bench smoke (pure test runs)
 #   scripts/ci.sh <args>     extra args forwarded to the fast pytest run
 #
 # The canonical tier-1 command (ROADMAP.md) remains
@@ -17,8 +18,20 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+if command -v ruff >/dev/null 2>&1; then
+  echo "== ruff check =="
+  ruff check src benchmarks tests
+else
+  echo "== ruff not installed — skipping lint (pip install ruff to enable) =="
+fi
+
 echo "== tier-1 (fast: -m 'not slow') =="
 python -m pytest -x -q -m "not slow" "$@"
+
+if [[ "${SKIP_BENCH:-0}" != "1" ]]; then
+  echo "== bench smoke: overhead (writes BENCH_overhead.json) =="
+  REPRO_BENCH_QUICK=1 python -m benchmarks.run --bench overhead
+fi
 
 if [[ "${RUN_SLOW:-0}" == "1" ]]; then
   echo "== stationary battery (slow configs) =="

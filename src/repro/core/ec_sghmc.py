@@ -88,13 +88,20 @@ def ec_sghmc(
     compression=None,  # optional repro.distributed.compression codec for the sync
     fused: bool = False,
     state_dtype=jnp.float32,
+    chain_axis: str | None = None,
 ) -> Sampler:
     """``center_noise_in_p``: Eq. 6 as printed injects N(0, 2eps^2 (V+C))
     into p — the C part being the paper's *model* of center-staleness noise.
     When the center is genuinely stale (s > 1 in a real deployment) that
     noise already exists physically and injecting it again double-counts;
     set False to inject only the V part (total noise then matches 2 eps D
-    when the staleness noise is real).  Faithful-to-paper default: True."""
+    when the staleness noise is real).  Faithful-to-paper default: True.
+
+    ``chain_axis``: mesh axis name the leading chain axis is sharded over
+    when the update runs inside ``shard_map`` (DESIGN.md §2).  The s-periodic
+    chain mean then pmean-reduces over that axis — still the program's only
+    cross-chain collective.  None (default) keeps the single-program SPMD
+    emulation where the mean is a plain axis-0 reduction."""
     schedule = as_schedule(step_size)
     minv = 1.0 / mass
     s = int(sync_every)
@@ -132,6 +139,13 @@ def ec_sghmc(
 
         # -- momentum updates ----------------------------------------------
         k_p, k_r = jax.random.split(rng)
+        if chain_axis is not None:
+            # shard_map: the caller passes a SHARD-INVARIANT key (DESIGN.md
+            # §2).  Per-chain noise must differ across shards — fold the
+            # shard index into k_p only — while the center noise k_r stays
+            # identical everywhere, or the replicated center state would
+            # silently random-walk apart per shard.
+            k_p = jax.random.fold_in(k_p, jax.lax.axis_index(chain_axis))
         noise_r = tree_random_normal(k_r, state.center_momentum, jnp.float32)
 
         if fused:
@@ -177,7 +191,7 @@ def ec_sghmc(
             new_params = jax.tree.map(
                 lambda th, u: th.astype(jnp.float32) + u, params, upd
             )
-            mean_theta = tree_mean_axis0(new_params)  # <- pmean over chain axis
+            mean_theta = tree_mean_axis0(new_params, chain_axis)  # <- pmean over chain axis
             if compression is not None:
                 mean_theta = jax.tree.map(
                     lambda x: compression.decode(compression.encode(x)), mean_theta

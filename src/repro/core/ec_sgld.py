@@ -39,7 +39,10 @@ def ec_sgld(
     mass: float = 1.0,
     sync_every: int = 1,
     temperature: float = 1.0,
+    chain_axis: str | None = None,
 ) -> Sampler:
+    """``chain_axis``: mesh axis name for shard_map SPMD (see ec_sghmc /
+    DESIGN.md §2) — the s-periodic chain mean pmean-reduces over it."""
     schedule = as_schedule(step_size)
     minv = 1.0 / mass
     s = int(sync_every)
@@ -57,6 +60,11 @@ def ec_sgld(
     def update(grads, state, params, rng):
         eps = schedule(state.step)
         k_t, k_r = jax.random.split(rng)
+        if chain_axis is not None:
+            # shard_map contract (DESIGN.md §2): per-chain noise decorrelates
+            # across shards; the center noise k_r must stay shard-invariant
+            # so the replicated center state does not diverge.
+            k_t = jax.random.fold_in(k_t, jax.lax.axis_index(chain_axis))
         noise_t = tree_random_normal(k_t, grads, jnp.float32)
         noise_r = tree_random_normal(k_r, state.center_momentum, jnp.float32)
         sig_t = jnp.sqrt(2.0 * eps * temperature)
@@ -88,7 +96,7 @@ def ec_sgld(
         def do_sync(operand):
             new_c, upd = operand
             new_params = jax.tree.map(lambda th, u: th.astype(jnp.float32) + u, params, upd)
-            return new_c, tree_mean_axis0(new_params)
+            return new_c, tree_mean_axis0(new_params, chain_axis)
 
         def no_sync(operand):
             del operand

@@ -43,4 +43,6 @@ def warmup_cosine(peak: float, warmup_steps: int, total_steps: int, floor: float
 def as_schedule(x):
     if callable(x):
         return x
-    return constant(float(x))
+    # no float() coercion: x may be a traced scalar (vmapped hyperparameter
+    # sweeps build samplers inside the program — repro.run.executor)
+    return constant(x)

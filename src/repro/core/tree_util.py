@@ -48,9 +48,18 @@ def apply_updates(params, updates):
     return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)).astype(p.dtype), params, updates)
 
 
-def tree_mean_axis0(a):
-    """Mean over the leading (chain) axis of every leaf."""
-    return jax.tree.map(lambda x: jnp.mean(x, axis=0), a)
+def tree_mean_axis0(a, axis_name: str | None = None):
+    """Mean over the leading (chain) axis of every leaf.
+
+    ``axis_name``: when the chain axis is additionally sharded over a mesh
+    axis (shard_map SPMD — DESIGN.md §2), each shard sees only its local
+    chains; pass the mesh axis name and the local mean is pmean-reduced to
+    the global chain mean.  Equal per-shard chain counts are assumed (the
+    mesh construction in ``repro.launch.mesh`` guarantees this)."""
+    m = jax.tree.map(lambda x: jnp.mean(x, axis=0), a)
+    if axis_name is not None:
+        m = jax.tree.map(lambda x: jax.lax.pmean(x, axis_name), m)
+    return m
 
 
 def tree_broadcast_axis0(a, k: int):

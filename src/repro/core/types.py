@@ -12,6 +12,16 @@ compose with any model and any distribution strategy:
 log posterior), matching the paper's convention: the sampler descends U.
 For elastically-coupled samplers, ``params``/``grads`` carry a leading
 chain axis of size K on every leaf.
+
+This 4-tuple is also the EXECUTOR protocol: ``repro.run.ChainExecutor``
+scans ``grad_targets -> grad_fn -> update`` as one device-resident
+``lax.scan`` program, folds ``stats`` into its per-chunk outputs, and is
+the only sanctioned way to drive a sampler for more than a handful of
+steps (DESIGN.md §3) — per-step Python loops measure host dispatch, not
+sampler math.  Everything here must therefore be jit-, vmap- and
+scan-safe: no Python side effects, no host syncs, and any step-dependence
+routed through ``state`` (the executor may rebuild a sampler inside a
+traced program via ``sampler_factory`` with traced hyperparameters).
 """
 from __future__ import annotations
 

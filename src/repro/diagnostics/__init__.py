@@ -11,6 +11,8 @@ benchmarks:
   recursions on a Gaussian target (the ground truth empirical moments are
   gated against; no small-ε approximation).
 - ``spread``   — cross-chain / ensemble dispersion scalars.
+- ``streaming`` — in-carry batch-means ESS (device-resident runs where the
+  FFT estimators' full-trajectory requirement is unaffordable).
 """
 from .ess import (
     autocorrelation,
@@ -34,6 +36,7 @@ from .moments import (
 )
 from .oracle import (
     GaussianOracle,
+    async_sghmc_stationary,
     ec_sghmc_stationary,
     lyapunov_stationary,
     monte_carlo_tolerance,
@@ -46,6 +49,12 @@ from .spread import (
     cross_chain_spread,
     ensemble_spread,
     pooled_moments,
+)
+from .streaming import (
+    BatchMeansState,
+    batch_ess_add,
+    batch_ess_estimate,
+    batch_ess_init,
 )
 
 __all__ = [
@@ -66,6 +75,7 @@ __all__ = [
     "welford_std",
     "welford_var",
     "GaussianOracle",
+    "async_sghmc_stationary",
     "ec_sghmc_stationary",
     "lyapunov_stationary",
     "monte_carlo_tolerance",
@@ -76,4 +86,8 @@ __all__ = [
     "cross_chain_spread",
     "ensemble_spread",
     "pooled_moments",
+    "BatchMeansState",
+    "batch_ess_add",
+    "batch_ess_estimate",
+    "batch_ess_init",
 ]

@@ -241,6 +241,69 @@ def sghmc_stationary(
     )
 
 
+def async_sghmc_stationary(
+    *,
+    step_size: float,
+    friction: float = 1.0,
+    mass: float = 1.0,
+    sync_every: int = 1,
+    temperature: float = 1.0,
+    noise_convention: str = "eq4",
+    precision: float = 1.0,
+    mu: float = 0.0,
+) -> GaussianOracle:
+    """Exact stationary moments of ``core.async_sghmc`` — the paper's naive
+    approach-I baseline — on N(μ, λ⁻¹I) with exact gradients.
+
+    The server advances Eq. 4 with gradients evaluated at the round-robin
+    workers' stale snapshots.  A worker arriving at step t pulled its
+    snapshot at its previous arrival t−s, where it received the POST-update
+    server params θ_{t−s+1}; with exact gradients every worker arriving at
+    the same step holds the same snapshot, so
+
+        ĝ_t = λ (θ_{t−s+1} − μ)            (a pure s−1 step delay)
+
+    and the recursion is linear with delay — exact via the companion-form
+    augmentation z = (θ_t, θ_{t−1}, …, θ_{t−s+1}, p_t) and a Lyapunov
+    solve.  s = 1 is synchronous-parallel SGHMC and reproduces
+    ``sghmc_stationary`` identically; s > 1 inflates θ-variance (the stale
+    gradient acts as a destabilizing feedback lag), which is exactly the
+    degradation Fig. 2 shows and EC-SGHMC avoids.  Assumes every phase is
+    covered (num_workers ≥ sync_every): no idle-server identity steps."""
+    eps, lam, s = float(step_size), float(precision), int(sync_every)
+    a = eps / mass
+    d_p = 1.0 - eps * friction / mass
+    sigma = temperature**0.5 * float(_noise_scale(eps, friction, 0.0, noise_convention))
+
+    n = s + 1
+    A = np.zeros((n, n))
+    A[0, 0] = 1.0  # θ' = θ + a p
+    A[0, s] = a
+    for i in range(1, s):  # delay line θ_{t−i}
+        A[i, i - 1] = 1.0
+    A[s, s - 1] = -eps * lam  # p' = d_p p − ελ θ_{t−s+1}
+    A[s, s] = d_p
+    Q = np.zeros((n, n))
+    Q[s, s] = sigma**2
+
+    rad = float(np.max(np.abs(np.linalg.eigvals(A))))
+    if rad >= 1.0 - 1e-9:
+        raise ValueError(
+            f"async-SGHMC delay recursion not contractive (spectral radius {rad:.6f}) — "
+            "staleness too large for this step size"
+        )
+    sg = lyapunov_stationary(A, Q)
+    return GaussianOracle(
+        theta_mean=float(mu),
+        theta_var=float(sg[0, 0]),
+        theta_cross_cov=0.0,
+        center_var=0.0,
+        momentum_var=float(sg[s, s]),
+        spectral_radius=rad,
+        phase_theta_vars=np.array([sg[0, 0]]),
+    )
+
+
 def sgld_stationary(
     *,
     step_size: float,

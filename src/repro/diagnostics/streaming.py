@@ -1,0 +1,108 @@
+"""Streaming (in-carry) effective-sample-size estimation via batch means.
+
+The FFT estimators in ``repro.diagnostics.ess`` need the whole trajectory
+on the host.  Device-resident runs (``repro.run.ChainExecutor``) cannot
+afford that: the accumulator below rides the ``lax.scan`` carry next to the
+Welford moments and yields an ESS estimate with ZERO host syncs and O(1)
+memory.
+
+Method — non-overlapping batch means (Glynn & Whitt):  split the series
+into batches of length ``b``; the variance of the batch means times ``b``
+estimates the spectral density at zero, sigma^2 = lim n Var(mean_n); then
+
+    ESS = n * Var(x) / sigma^2_bm ,    sigma^2_bm = b * Var_m(batch means).
+
+Consistent as b -> inf with m = n/b -> inf; b ~ sqrt(n) is the usual
+compromise, so pick ``batch_len`` near sqrt(total steps).  The estimate is
+elementwise over the probe array — chains/dims stay separate, matching the
+``*_nd`` convention of the FFT estimators.
+
+Moment arithmetic is f32; COUNTERS are int32 — an f32 counter freezes at
+2^24 ≈ 16.7M steps (x + 1 == x), exactly the run lengths this module
+exists for.  The state is a flat NamedTuple of arrays, so it jits,
+donates, and vmaps like any other carry.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax.numpy as jnp
+
+
+class BatchMeansState(NamedTuple):
+    """Running batch-means ESS accumulator for one probe array."""
+
+    batch_len: jnp.ndarray  # scalar i32 (carried, not static: keeps the carry pure)
+    count: jnp.ndarray  # scalar i32: samples seen
+    batch_sum: Any  # (probe shape) f32: sum within the open batch
+    # Welford over completed batch means
+    m_count: jnp.ndarray  # scalar i32: completed batches
+    m_mean: Any
+    m_m2: Any
+    # Welford over raw samples (for Var(x))
+    x_mean: Any
+    x_m2: Any
+
+
+def batch_ess_init(template, batch_len: int) -> BatchMeansState:
+    # distinct zero buffers per field — aliasing would break XLA donation
+    z = lambda: jnp.zeros(jnp.shape(template), jnp.float32)
+    return BatchMeansState(
+        batch_len=jnp.asarray(int(batch_len), jnp.int32),
+        count=jnp.zeros((), jnp.int32),
+        batch_sum=z(),
+        m_count=jnp.zeros((), jnp.int32),
+        m_mean=z(),
+        m_m2=z(),
+        x_mean=z(),
+        x_m2=z(),
+    )
+
+
+def batch_ess_add(state: BatchMeansState, x) -> BatchMeansState:
+    """One streaming update (branch-free: batch closure via select masks)."""
+    x = jnp.asarray(x, jnp.float32)
+    n = state.count + 1
+
+    # raw-sample Welford
+    d = x - state.x_mean
+    x_mean = state.x_mean + d / n.astype(jnp.float32)
+    x_m2 = state.x_m2 + d * (x - x_mean)
+
+    batch_sum = state.batch_sum + x
+    complete = jnp.mod(n, state.batch_len) == 0
+
+    # close the batch: fold its mean into the batch-mean Welford
+    bm = batch_sum / state.batch_len.astype(jnp.float32)
+    mc = state.m_count + 1
+    dm = bm - state.m_mean
+    m_mean_new = state.m_mean + dm / mc.astype(jnp.float32)
+    m_m2_new = state.m_m2 + dm * (bm - m_mean_new)
+
+    sel = lambda a, b: jnp.where(complete, a, b)
+    return BatchMeansState(
+        batch_len=state.batch_len,
+        count=n,
+        batch_sum=sel(jnp.zeros_like(batch_sum), batch_sum),
+        m_count=sel(mc, state.m_count),
+        m_mean=sel(m_mean_new, state.m_mean),
+        m_m2=sel(m_m2_new, state.m_m2),
+        x_mean=x_mean,
+        x_m2=x_m2,
+    )
+
+
+def batch_ess_estimate(state: BatchMeansState):
+    """Elementwise ESS estimate (same shape as the probe).  Returns the raw
+    sample count until at least two batches have closed (no estimate yet), and
+    clips to [1, n] — batch-means can overshoot on anticorrelated series.
+    jit-safe: no host syncs, no branching."""
+    n = state.count.astype(jnp.float32)
+    m = state.m_count.astype(jnp.float32)
+    var_x = state.x_m2 / jnp.maximum(n - 1.0, 1.0)
+    var_bm = state.m_m2 / jnp.maximum(m - 1.0, 1.0)
+    sigma2 = state.batch_len.astype(jnp.float32) * var_bm
+    ess = n * var_x / jnp.maximum(sigma2, 1e-30)
+    ess = jnp.clip(ess, 1.0, jnp.maximum(n, 1.0))
+    ready = (m >= 2.0) & (var_x > 0.0).astype(jnp.bool_)
+    return jnp.where(ready, ess, jnp.maximum(n, 1.0))

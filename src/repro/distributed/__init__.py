@@ -1,2 +1,3 @@
-from . import sharding
-from .sharding import build_spec, tree_shardings, tree_specs
+from . import compression, sharding
+from .compression import Int8Codec, int8_codec
+from .sharding import build_spec, chain_specs, tree_shardings, tree_specs

@@ -90,6 +90,25 @@ def tree_shardings(axes_tree, shapes_tree, rules, mesh):
     )
 
 
+def chain_specs(tree, num_chains: int, axis_name: str = "chain"):
+    """PartitionSpec pytree for the executor's shard_map chain routing
+    (DESIGN.md §2): leaves whose LEADING dim equals ``num_chains`` shard
+    that dim over ``axis_name``; everything else (center variables, step
+    counters, scalars) is replicated.
+
+    This shape heuristic is exactly the repo's SPMD layout contract: chain
+    state mirrors params with a leading K axis, center state carries none.
+    Callers with a K-sized non-chain leading dim must pass explicit specs
+    instead."""
+    def spec(x):
+        shape = tuple(getattr(x, "shape", ()))
+        if len(shape) >= 1 and shape[0] == num_chains:
+            return PartitionSpec(axis_name)
+        return PartitionSpec()
+
+    return jax.tree.map(spec, tree)
+
+
 # ---------------------------------------------------------------------------
 # Rule tables
 # ---------------------------------------------------------------------------

@@ -1,5 +1,9 @@
 """Training launcher: EC-SGHMC posterior sampling over any assigned arch.
 
+The step loop is device-resident (``repro.run.ChainExecutor`` via
+``train.loop``): whole chunks of sampler steps compile as one scan program,
+and the sampler's jit-safe ``stats`` hook is logged at chunk boundaries.
+
 CPU-runnable end-to-end with --smoke (reduced config); the production mesh
 path is exercised by dryrun.py.  Example:
 
@@ -95,7 +99,7 @@ def main(argv=None):
     )
     params, state, history = run(
         train_step, params, state, batch_fn, loop_cfg,
-        num_chains=args.chains, alpha=args.alpha,
+        num_chains=args.chains, alpha=args.alpha, sampler=sampler,
     )
     if history:
         print(f"final nll/token: {history[-1]['nll_per_token']:.4f}")

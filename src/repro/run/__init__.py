@@ -1,0 +1,4 @@
+"""Device-resident run executor (scan-fused sampling drivers)."""
+from .executor import ChainExecutor, RunResult, rollout
+
+__all__ = ["ChainExecutor", "RunResult", "rollout"]

@@ -6,7 +6,13 @@ lower: one new token against a KV/recurrent cache of seq_len.
 ``ensemble_diagnostics`` reports the dispersion of a chain-ensemble before
 it serves: a collapsed ensemble (zero spread) silently degrades Bayesian
 model averaging to a single model, and the serving tier is where that must
-be caught."""
+be caught.
+
+``collect_ensemble`` is the device-resident collection path: the sampler
+run that produces the K ensemble members compiles as ONE chunked-scan
+program (``repro.run.rollout``) with thinned trace collection — members
+never round-trip to the host individually.  The interactive ``generate``
+loop below is the single per-step Python loop this repo still allows."""
 from __future__ import annotations
 
 import jax
@@ -15,6 +21,7 @@ import jax.numpy as jnp
 from repro.diagnostics import ensemble_spread
 from repro.models import ModelDef
 from repro.models.common import ModelConfig
+from repro.run import rollout
 
 
 def make_prefill_step(cfg: ModelConfig, model: ModelDef, max_seq: int, cache_dtype=None):
@@ -43,6 +50,41 @@ def ensemble_diagnostics(params_stack, *, min_rel_spread: float = 1e-6) -> dict:
     out = ensemble_spread(params_stack)
     out["collapsed"] = bool(out["rel_spread"] < min_rel_spread)
     return out
+
+
+def collect_ensemble(
+    sampler,
+    grad_fn,
+    params0,
+    *,
+    num_samples: int,
+    key,
+    thin: int = 16,
+    burn: int | None = None,
+):
+    """Draw ``num_samples`` ensemble members as thinned posterior samples of
+    one device-resident sampler run.
+
+    The whole run — burn-in, thinning, trace collection — is a single
+    chunked ``lax.scan`` program; only the (num_samples, ...) member stack
+    comes back to the host, stacked on a leading axis ready for
+    ``ensemble_decode`` / ``ensemble_diagnostics``.  ``grad_fn(theta)``
+    is the gradient of whatever potential the ensemble should target
+    (posterior for a trained model, prior bootstrap for a demo).  ``burn``
+    defaults to one thinning interval and is rounded up so every kept
+    sample is post-burn-in."""
+    if num_samples < 1 or thin < 1:
+        raise ValueError("num_samples and thin must be >= 1")
+    burn = thin if burn is None else thin * -(-burn // thin)  # ceil to a thin multiple
+    steps = burn + num_samples * thin
+    keys = jax.random.split(key, steps)
+    res = rollout(
+        sampler, grad_fn, params0,
+        num_steps=steps, keys=keys, thin=thin, moments=False,
+        chunk_steps=steps,
+    )
+    members = jax.tree.map(lambda a: jnp.asarray(a[-num_samples:]), res.trace)
+    return members, res
 
 
 def generate(cfg: ModelConfig, model: ModelDef, params, batch, max_seq: int, num_tokens: int):

@@ -1,18 +1,25 @@
 """The training loop: sampler-driven posterior sampling with fault
 tolerance (atomic checkpoints, auto-resume, simulated preemption) and
-elastic chain scaling."""
+elastic chain scaling.
+
+The step loop itself is DEVICE-RESIDENT: ``repro.run.ChainExecutor``
+compiles chunks of steps as one donated ``lax.scan`` program, and the host
+only regains control at chunk boundaries.  The chunk length is the GCD of
+every host-event cadence (checkpoint, logging, simulated preemption), so
+every event the per-step loop used to honor still lands exactly on a
+boundary — auto-resume semantics are unchanged while per-step dispatch
+overhead is gone (DESIGN.md §3).
+"""
 from __future__ import annotations
 
+import math
 import time
-from dataclasses import dataclass, field
-from pathlib import Path
+from dataclasses import dataclass
 from typing import Callable, Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.core import apply_updates
+from repro.run import ChainExecutor
 from . import checkpoint as ckpt_lib
 
 
@@ -25,10 +32,31 @@ class LoopConfig:
     keep_ckpts: int = 3
     preempt_at: Optional[int] = None  # simulate a kill after this step
     seed: int = 0
+    max_chunk: int = 1024  # upper bound on steps per device visit
 
 
 class Preempted(RuntimeError):
     pass
+
+
+def _chunk_steps(cfg: LoopConfig) -> int:
+    """Largest chunk whose boundaries hit every host-event step exactly."""
+    g = 0
+    if cfg.ckpt_dir:
+        g = math.gcd(g, cfg.ckpt_every)
+    if cfg.log_every:
+        g = math.gcd(g, cfg.log_every)
+    if cfg.preempt_at is not None:
+        g = math.gcd(g, cfg.preempt_at)
+    if g == 0:
+        # no host events at all: chunking is a pure perf knob (the executor
+        # handles a partial final chunk), so just cap it
+        return max(min(cfg.num_steps or cfg.max_chunk, cfg.max_chunk), 1)
+    if g <= cfg.max_chunk:
+        return g
+    # the bound must not break divisibility (a capped non-divisor would
+    # skip events entirely): largest divisor of g within the bound
+    return max(d for d in range(1, cfg.max_chunk + 1) if g % d == 0)
 
 
 def run(
@@ -39,6 +67,7 @@ def run(
     cfg: LoopConfig,
     num_chains: int = 1,
     alpha: float = 1.0,
+    sampler=None,  # optional: its jit-safe stats hook is logged at boundaries
 ):
     """Returns (params, state, history).  Auto-resumes from cfg.ckpt_dir."""
     params, state = init_params, init_state
@@ -51,22 +80,39 @@ def run(
             start, params, state, extra = got
             print(f"[loop] resumed from step {start}" + (" (elastic)" if extra.get("elastic_resample") else ""))
 
-    step_jit = jax.jit(train_step, donate_argnums=(0, 1))
+    executor = ChainExecutor(
+        step_fn=train_step,
+        batch_fn=batch_fn,
+        key_mode="fold",
+        chunk_steps=_chunk_steps(cfg),
+        donate=True,
+    )
+    stats_fn = jax.jit(sampler.stats) if sampler is not None and sampler.stats else None
+
     key = jax.random.key(cfg.seed)
     history = []
     t0 = time.time()
-    for t in range(start, cfg.num_steps):
-        batch = batch_fn(t)
-        params, state, metrics = step_jit(params, state, batch, jax.random.fold_in(key, t))
-        if cfg.ckpt_dir and (t + 1) % cfg.ckpt_every == 0:
-            ckpt_lib.save(cfg.ckpt_dir, t + 1, params, state)
+
+    def on_chunk(step_end, params, state, outs):
+        metrics = jax.tree.map(lambda a: a[-1], outs["metrics"])
+        if cfg.ckpt_dir and step_end % cfg.ckpt_every == 0:
+            ckpt_lib.save(cfg.ckpt_dir, step_end, params, state)
             ckpt_lib.prune(cfg.ckpt_dir, cfg.keep_ckpts)
-        if (t + 1) % cfg.log_every == 0:
+        if cfg.log_every and step_end % cfg.log_every == 0:
             m = {k: float(v) for k, v in metrics.items()}
-            m["step"] = t + 1
+            if stats_fn is not None:
+                m.update({k: float(v) for k, v in stats_fn(state, params).items() if k != "step"})
+            m["step"] = step_end
             m["wall_s"] = round(time.time() - t0, 2)
             history.append(m)
-            print(f"[loop] step {t+1}: " + " ".join(f"{k}={v:.5g}" for k, v in m.items() if k != "step"))
-        if cfg.preempt_at is not None and (t + 1) == cfg.preempt_at:
-            raise Preempted(f"simulated preemption at step {t + 1}")
+            print(f"[loop] step {step_end}: " + " ".join(f"{k}={v:.5g}" for k, v in m.items() if k != "step"))
+        if cfg.preempt_at is not None and step_end == cfg.preempt_at:
+            raise Preempted(f"simulated preemption at step {step_end}")
+
+    if start < cfg.num_steps:
+        result = executor.run(
+            params, state, num_steps=cfg.num_steps - start, key=key,
+            start_step=start, on_chunk=on_chunk,
+        )
+        params, state = result.params, result.state
     return params, state, history

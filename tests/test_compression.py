@@ -1,0 +1,96 @@
+"""Unit tests for the int8 sync-compression codec
+(``repro.distributed.compression``): round-trip error bounds, shape/pad
+handling, wire ratio, and the EC-SGHMC integration path whose soundness
+argument (quantization error absorbed into the center-noise covariance C —
+DESIGN.md §2) justifies compressing the one collective."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro.distributed import Int8Codec, int8_codec
+from repro.distributed.compression import BLOCK
+
+
+@pytest.fixture(scope="module")
+def codec():
+    return int8_codec()
+
+
+class TestRoundTrip:
+    @pytest.mark.parametrize("shape", [(BLOCK,), (1000,), (3, 7, 11), (1,), (256, 4)])
+    def test_error_within_quantization_bound(self, codec, shape):
+        """|decode(encode(x)) - x| <= scale/2 per block, scale = max|block|/127."""
+        x = jax.random.normal(jax.random.PRNGKey(hash(shape) % 2**31), shape) * 3.0
+        dec = codec.decode(codec.encode(x))
+        assert dec.shape == shape and dec.dtype == jnp.float32
+
+        flat = np.asarray(x, np.float32).reshape(-1)
+        err = np.abs(np.asarray(dec).reshape(-1) - flat)
+        pad = (-flat.size) % BLOCK
+        blocks = np.pad(flat, (0, pad)).reshape(-1, BLOCK)
+        scale = np.abs(blocks).max(axis=1, keepdims=True) / 127.0
+        bound = np.repeat(scale, BLOCK, axis=1).reshape(-1)[: flat.size]
+        assert np.all(err <= 0.5 * bound + 1e-7), float((err - 0.5 * bound).max())
+
+    def test_zeros_exact(self, codec):
+        x = jnp.zeros((513,))
+        np.testing.assert_array_equal(np.asarray(codec.decode(codec.encode(x))), 0.0)
+
+    def test_extremes_exact(self, codec):
+        """Block maxima map to ±127 exactly and decode losslessly."""
+        x = jnp.concatenate([jnp.full((BLOCK,), 2.0), jnp.full((BLOCK,), -5.0)])
+        dec = np.asarray(codec.decode(codec.encode(x)))
+        np.testing.assert_allclose(dec[:BLOCK], 2.0, rtol=1e-6)
+        np.testing.assert_allclose(dec[BLOCK:], -5.0, rtol=1e-6)
+
+    def test_per_block_scales_isolate_outliers(self, codec):
+        """A huge value in one block must not destroy the resolution of the
+        others — the point of per-block scaling."""
+        x = jnp.concatenate([jnp.full((BLOCK,), 1e4), 0.01 * jnp.arange(BLOCK, dtype=jnp.float32)])
+        dec = np.asarray(codec.decode(codec.encode(x)))
+        small = np.asarray(x)[BLOCK:]
+        assert np.abs(dec[BLOCK:] - small).max() <= (small.max() / 127.0) * 0.5 + 1e-7
+
+    def test_wire_format(self, codec):
+        enc = codec.encode(jnp.ones((1000,)))
+        assert enc["q"].dtype == jnp.int8
+        assert enc["q"].shape == (4, BLOCK)  # 1000 padded to 4 blocks
+        assert enc["n"] == 1000 and enc["shape"] == (1000,)
+        # int8 payload + one f32 scale per block, vs f32
+        assert codec.ratio == pytest.approx((1 + 4 / BLOCK) / 4)
+        assert codec.ratio < 0.26
+
+    def test_reexport(self):
+        """Satellite: the codec is part of the public distributed API."""
+        import repro.distributed as dist
+
+        assert dist.int8_codec is int8_codec
+        assert isinstance(int8_codec(), Int8Codec)
+
+
+class TestECSGHMCIntegration:
+    def test_compressed_sync_stays_close(self):
+        """One sync step with the codec wrapping the exchanged mean: the
+        resulting center snapshot differs from the uncompressed run by at
+        most the quantization bound, and the dynamics stay finite."""
+        kw = dict(step_size=1e-2, alpha=1.0, sync_every=1, noise_convention="eq6")
+        plain = core.ec_sghmc(**kw)
+        comp = core.ec_sghmc(compression=int8_codec(), **kw)
+        params = jax.random.normal(jax.random.PRNGKey(0), (4, 600))
+        rng = jax.random.PRNGKey(1)
+
+        def step(sampler, p):
+            st = sampler.init(p)
+            upd, st = sampler.update(0.1 * p, st, params=p, rng=rng)
+            return core.apply_updates(p, upd), st
+
+        p1, st1 = step(plain, params)
+        p2, st2 = step(comp, params)
+        np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))  # params untouched by codec
+        m1 = np.asarray(st1.mean_theta_stale)
+        m2 = np.asarray(st2.mean_theta_stale)
+        bound = np.abs(m1).max() / 127.0
+        assert np.abs(m1 - m2).max() <= bound + 1e-7
+        assert np.all(np.isfinite(m2))

@@ -1,0 +1,405 @@
+"""ChainExecutor equivalence battery (the ISSUE-4 acceptance gate).
+
+The executor replaced every per-step Python driver in the repo; these tests
+pin its contract:
+
+* trajectories are BIT-IDENTICAL (f32) to the removed driver — one jitted
+  step per Python iteration — for SGHMC, EC-SGHMC (fused and unfused) and
+  the async approach-I baseline, in every key mode;
+* chunking is invisible: any ``chunk_steps`` split yields the same bits,
+  which is what makes checkpoint/preemption boundaries free;
+* the sweep axis (stacked seeds or a vmapped hyperparameter grid via
+  ``sampler_factory``) matches member-by-member runs;
+* in-carry diagnostics (Welford moments, batch-means ESS) agree with the
+  trajectory statistics they replace;
+* the shard_map chain routing keeps the s-periodic center sync as the
+  program's ONLY cross-chain collective — checked on the lowered HLO in a
+  subprocess with 4 forced host devices (the acceptance criterion).
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro import diagnostics as diag
+from repro.run import ChainExecutor, rollout
+
+MU = jnp.array([2.0, -1.0])
+STEPS = 96
+K = 4
+
+
+def grad_U(p):
+    return p - MU
+
+
+def start(shape=(K, 2)):
+    """Fresh start buffer per call — the executor DONATES its carry."""
+    return jnp.broadcast_to(jnp.array([-2.0, 3.0]), shape) + 0.0
+
+
+def per_step_reference(sampler, params, *, keys=None, key=None, key_mode="keys",
+                       num_steps=STEPS):
+    """THE removed driver: one jitted step per Python iteration, gradients
+    at ``grad_targets`` (stale snapshots for approach-I samplers)."""
+    state = sampler.init(params)
+
+    @jax.jit
+    def step(params, state, rng):
+        targets = sampler.grad_targets(state, params) if sampler.grad_targets else params
+        upd, state = sampler.update(grad_U(targets), state, params=params, rng=rng)
+        return core.apply_updates(params, upd), state
+
+    traj = []
+    for t in range(num_steps):
+        if key_mode == "keys":
+            rng = keys[t]
+        elif key_mode == "fold":
+            rng = jax.random.fold_in(key, t)
+        else:  # carry
+            key, rng = jax.random.split(key)
+        params, state = step(params, state, rng)
+        traj.append(np.asarray(params))
+    return np.stack(traj)
+
+
+SAMPLERS = {
+    "sghmc": lambda: core.sghmc(step_size=1e-2, friction=1.0),
+    "ec_s1": lambda: core.ec_sghmc(step_size=1e-2, alpha=1.0, sync_every=1,
+                                   noise_convention="eq6"),
+    "ec_s4": lambda: core.ec_sghmc(step_size=1e-2, alpha=1.0, sync_every=4,
+                                   noise_convention="eq6"),
+    "ec_fused_s1": lambda: core.ec_sghmc(step_size=1e-2, alpha=1.0, sync_every=1,
+                                         fused=True),
+    "ec_fused_s4": lambda: core.ec_sghmc(step_size=1e-2, alpha=1.0, sync_every=4,
+                                         fused=True),
+}
+
+
+class TestBitIdentity:
+    """Acceptance criterion: executor == removed per-step driver, exactly."""
+
+    @pytest.mark.parametrize("name", list(SAMPLERS))
+    def test_keys_mode(self, name):
+        sampler = SAMPLERS[name]()
+        keys = jax.random.split(jax.random.PRNGKey(0), STEPS)
+        res = rollout(sampler, grad_U, start(), num_steps=STEPS, keys=keys,
+                      chunk_steps=32)
+        ref = per_step_reference(sampler, start(), keys=keys)
+        np.testing.assert_array_equal(np.asarray(res.trace), ref)
+
+    def test_async_grad_targets(self):
+        """Approach-I: gradients must be evaluated at the stale worker
+        snapshots, not the server params."""
+        sampler = core.async_sghmc(step_size=1e-2, num_workers=K, sync_every=2)
+        keys = jax.random.split(jax.random.PRNGKey(1), STEPS)
+        res = rollout(sampler, grad_U, start((2,)), num_steps=STEPS, keys=keys,
+                      chunk_steps=32)
+        ref = per_step_reference(sampler, start((2,)), keys=keys)
+        np.testing.assert_array_equal(np.asarray(res.trace), ref)
+
+    def test_carry_key_mode(self):
+        """``key_mode='carry'`` reproduces the legacy split-per-step RNG
+        sequence of the posterior driver."""
+        sampler = SAMPLERS["ec_s4"]()
+        # the base key joins the donated carry and is consumed — the
+        # reference needs its own instance
+        res = rollout(sampler, grad_U, start(), num_steps=STEPS,
+                      key=jax.random.PRNGKey(2), key_mode="carry", chunk_steps=24)
+        ref = per_step_reference(sampler, start(), key=jax.random.PRNGKey(2),
+                                 key_mode="carry")
+        np.testing.assert_array_equal(np.asarray(res.trace), ref)
+
+    def test_fold_key_mode(self):
+        """``key_mode='fold'`` reproduces the training loop's absolute-step
+        fold_in stream."""
+        sampler = SAMPLERS["sghmc"]()
+        key = jax.random.key(3)
+        res = rollout(sampler, grad_U, start(), num_steps=STEPS, key=key,
+                      key_mode="fold", chunk_steps=32)
+        ref = per_step_reference(sampler, start(), key=key, key_mode="fold")
+        np.testing.assert_array_equal(np.asarray(res.trace), ref)
+
+
+class TestChunking:
+    def test_chunk_split_invisible(self):
+        """Any chunk_steps partition produces the same bits — checkpoints
+        and preemption boundaries cannot perturb the dynamics."""
+        keys = jax.random.split(jax.random.PRNGKey(4), STEPS)
+        outs = []
+        for chunk in (STEPS, 32, 16):
+            sampler = SAMPLERS["ec_s4"]()
+            res = rollout(sampler, grad_U, start(), num_steps=STEPS, keys=keys,
+                          chunk_steps=chunk)
+            outs.append(np.asarray(res.trace))
+        np.testing.assert_array_equal(outs[0], outs[1])
+        np.testing.assert_array_equal(outs[0], outs[2])
+
+    def test_resume_from_start_step(self):
+        """fold mode + start_step: a split run (resume) is bit-identical to
+        one uninterrupted run — the training loop's auto-resume contract."""
+        sampler = SAMPLERS["ec_s4"]()
+        key = jax.random.key(5)
+        full = rollout(sampler, grad_U, start(), num_steps=STEPS, key=key,
+                       key_mode="fold", chunk_steps=STEPS)
+
+        half = STEPS // 2
+        sampler2 = SAMPLERS["ec_s4"]()
+        first = rollout(sampler2, grad_U, start(), num_steps=half, key=key,
+                        key_mode="fold", chunk_steps=half)
+        ex = ChainExecutor(
+            sampler=sampler2, grad_fn=lambda t, _b: grad_U(t),
+            trace_fn=lambda p: p, chunk_steps=half, key_mode="fold",
+        )
+        second = ex.run(first.params, first.state, num_steps=half, key=key,
+                        start_step=half)
+        resumed = np.concatenate([np.asarray(first.trace), np.asarray(second.trace)])
+        np.testing.assert_array_equal(np.asarray(full.trace), resumed)
+
+    def test_early_stop(self):
+        sampler = SAMPLERS["sghmc"]()
+        keys = jax.random.split(jax.random.PRNGKey(6), STEPS)
+        ex = ChainExecutor(sampler=sampler, grad_fn=lambda t, _b: grad_U(t),
+                           chunk_steps=16, key_mode="keys")
+        stops = []
+
+        def on_chunk(step_end, params, state, outs):
+            stops.append(step_end)
+            return step_end < 32
+
+        res = ex.run(start(), sampler.init(start()), num_steps=STEPS, keys=keys,
+                     on_chunk=on_chunk)
+        assert res.steps == 32 and stops == [16, 32]
+
+
+class TestTraceAndDiagnostics:
+    def test_thinning(self):
+        """thin=4 keeps exactly every 4th post-update sample."""
+        keys = jax.random.split(jax.random.PRNGKey(7), STEPS)
+        sampler = SAMPLERS["sghmc"]()
+        full = rollout(sampler, grad_U, start(), num_steps=STEPS, keys=keys,
+                       chunk_steps=32)
+        sampler2 = SAMPLERS["sghmc"]()
+        thinned = rollout(sampler2, grad_U, start(), num_steps=STEPS, keys=keys,
+                          thin=4, chunk_steps=32)
+        np.testing.assert_array_equal(
+            np.asarray(thinned.trace), np.asarray(full.trace)[3::4]
+        )
+
+    def test_in_carry_moments_match_trajectory(self):
+        keys = jax.random.split(jax.random.PRNGKey(8), STEPS)
+        sampler = SAMPLERS["ec_s1"]()
+        res = rollout(sampler, grad_U, start(), num_steps=STEPS, keys=keys,
+                      moments=True, chunk_steps=32)
+        traj = np.asarray(res.trace)
+        np.testing.assert_allclose(
+            np.asarray(diag.welford_mean(res.moments)), traj.mean(0), rtol=1e-5, atol=1e-5
+        )
+        np.testing.assert_allclose(
+            np.asarray(diag.welford_var(res.moments)), traj.var(0), rtol=1e-3, atol=1e-5
+        )
+
+    def test_moments_from_burnin(self):
+        keys = jax.random.split(jax.random.PRNGKey(9), STEPS)
+        burn = 32
+        sampler = SAMPLERS["sghmc"]()
+        res = rollout(sampler, grad_U, start(), num_steps=STEPS, keys=keys,
+                      moments=True, moments_from=burn, chunk_steps=48)
+        traj = np.asarray(res.trace)
+        np.testing.assert_allclose(
+            np.asarray(diag.welford_mean(res.moments)), traj[burn:].mean(0),
+            rtol=1e-5, atol=1e-5,
+        )
+
+    def test_streaming_ess_tracks_fft_estimate(self):
+        """Batch-means ESS from the carry lands within a small factor of the
+        full-trajectory FFT estimate on a well-mixed chain."""
+        n = 4096
+        sampler = core.sghmc(step_size=0.3, friction=2.0)
+        keys = jax.random.split(jax.random.PRNGKey(10), n)
+        res = rollout(sampler, grad_U, start(), num_steps=n, keys=keys,
+                      moments=False, chunk_steps=n,
+                      ess_probe_fn=lambda p: p[0], ess_batch_len=64)
+        stream = float(np.sum(np.asarray(diag.batch_ess_estimate(res.ess))))
+        traj = np.asarray(res.trace)[:, 0, :]  # (T, 2) chain-0 series
+        fft = float(np.sum(diag.effective_sample_size_nd(traj[None])))
+        assert 0.2 * fft < stream < 5.0 * fft, (stream, fft)
+
+    def test_collect_stats_series(self):
+        sampler = SAMPLERS["ec_s4"]()
+        keys = jax.random.split(jax.random.PRNGKey(11), STEPS)
+        ex = ChainExecutor(sampler=sampler, grad_fn=lambda t, _b: grad_U(t),
+                           trace_fn=lambda p: p, thin=8, collect_stats=True,
+                           chunk_steps=32, key_mode="keys")
+        res = ex.run(start(), sampler.init(start()), num_steps=STEPS, keys=keys)
+        assert res.stats is not None
+        k = next(iter(res.stats))
+        assert res.stats[k].shape[0] == STEPS // 8  # one row per thin point
+
+
+class TestSweep:
+    def test_stacked_seeds_match_members(self):
+        """The vmapped sweep program equals per-member runs, bitwise."""
+        R = 3
+        keys = jnp.stack([jax.random.split(jax.random.PRNGKey(20 + r), STEPS)
+                          for r in range(R)])
+        sampler = SAMPLERS["ec_s4"]()
+        swept = rollout(sampler, grad_U, start((R, K, 2)), num_steps=STEPS,
+                        keys=keys, chunk_steps=32, sweep=True)
+        for r in range(R):
+            sampler_r = SAMPLERS["ec_s4"]()
+            member = rollout(sampler_r, grad_U, start(), num_steps=STEPS,
+                             keys=keys[r], chunk_steps=32)
+            np.testing.assert_array_equal(
+                np.asarray(swept.trace)[r], np.asarray(member.trace)
+            )
+
+    def test_hyper_factory_grid(self):
+        """An (alpha, step_size) grid built INSIDE the traced program via
+        sampler_factory matches directly constructed samplers."""
+        hyper = {"alpha": jnp.array([0.0, 1.0]), "eps": jnp.array([5e-3, 1e-2])}
+
+        def factory(h):
+            return core.ec_sghmc(step_size=h["eps"], alpha=h["alpha"], sync_every=4,
+                                 friction=1.0, center_friction=1.0,
+                                 noise_convention="eq6")
+
+        grid = 2
+        p0 = start((grid, K, 2))
+        st0 = jax.vmap(lambda h, p: factory(h).init(p))(hyper, p0)
+        keys = jnp.stack([jax.random.split(jax.random.PRNGKey(30 + i), STEPS)
+                          for i in range(grid)])
+        ex = ChainExecutor(sampler_factory=factory, grad_fn=lambda t, _b: grad_U(t),
+                           trace_fn=lambda p: p, chunk_steps=32, key_mode="keys")
+        res = ex.run(p0, st0, num_steps=STEPS, keys=keys, hyper=hyper)
+        for i, (alpha, eps) in enumerate([(0.0, 5e-3), (1.0, 1e-2)]):
+            direct = core.ec_sghmc(step_size=eps, alpha=alpha, sync_every=4,
+                                   friction=1.0, center_friction=1.0,
+                                   noise_convention="eq6")
+            member = rollout(direct, grad_U, start(), num_steps=STEPS,
+                             keys=keys[i], chunk_steps=32)
+            np.testing.assert_allclose(
+                np.asarray(res.trace)[i], np.asarray(member.trace),
+                rtol=0, atol=1e-6,
+            )
+
+
+_SHARDED_SCRIPT = textwrap.dedent("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro import core
+    from repro.run import ChainExecutor
+
+    MU = jnp.array([2.0, -1.0])
+    K, SYNC, STEPS = 4, 4, 64
+    assert jax.device_count() == 4, jax.device_count()
+    mesh = jax.make_mesh((4,), ("chain",))
+
+    sampler = core.ec_sghmc(step_size=1e-2, alpha=1.0, sync_every=SYNC,
+                            noise_convention="eq6", chain_axis="chain")
+    ex = ChainExecutor(sampler=sampler, grad_fn=lambda t, _b: t - MU,
+                       moments=True, chunk_steps=STEPS, key_mode="fold")
+    params = jnp.broadcast_to(jnp.array([-2.0, 3.0]), (K, 2)) + 0.0
+    state = sampler.init(params)
+
+    lowered = ex.lower_sharded(params, state, num_steps=STEPS,
+                               key=jax.random.key(0), mesh=mesh)
+    hlo = lowered.as_text()
+    n_allreduce = hlo.count("all_reduce") + hlo.count("all-reduce")
+    others = sum(hlo.count(op) for op in
+                 ("all_gather", "all-gather", "all_to_all", "all-to-all",
+                  "collective_permute", "collective-permute"))
+    print(f"COLLECTIVES allreduce={n_allreduce} others={others}")
+
+    params = jnp.broadcast_to(jnp.array([-2.0, 3.0]), (K, 2)) + 0.0
+    state = sampler.init(params)
+    res = ex.run_sharded(params, state, num_steps=2048, key=jax.random.key(0),
+                         mesh=mesh)
+    import repro.diagnostics as diag
+    mean = np.asarray(diag.welford_mean(res.moments)).mean(axis=0)
+    spread = float(np.abs(np.asarray(res.params) -
+                          np.asarray(res.params).mean(0)).mean())
+    ok = np.all(np.isfinite(np.asarray(res.params)))
+    print(f"RUN ok={ok} mean0={mean[0]:.3f} mean1={mean[1]:.3f} spread={spread:.3f}")
+
+    # nominally-replicated center state must stay bit-identical per shard:
+    # the chain_axis sampler folds axis_index into per-chain noise ONLY,
+    # so the shard-invariant step key gives every shard the same center
+    # draw (check_rep=False would otherwise hide silent divergence)
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.sharding import chain_specs
+
+    params = jnp.broadcast_to(jnp.array([-2.0, 3.0]), (K, 2)) + 0.0
+    tree = {"params": params, "state": sampler.init(params)}
+    specs = chain_specs(tree, K, "chain")
+
+    def chunk(key, tree):
+        p, st = tree["params"], tree["state"]
+        for t in range(2 * SYNC):
+            rng = jax.random.fold_in(key, t)
+            upd, st = sampler.update(p - MU, st, params=p, rng=rng)
+            p = jax.tree.map(lambda a, u: a + u, p, upd)
+        return jax.tree.map(lambda x: x[None], (st.center, st.center_momentum))
+
+    cents = shard_map(chunk, mesh=mesh, in_specs=(P(), specs),
+                      out_specs=P("chain"), check_rep=False)(
+        jax.random.key(0), tree)
+    diffs = [float(np.abs(np.asarray(c) - np.asarray(c)[0]).max()) for c in cents]
+    print(f"CENTER maxdiff={max(diffs):.3e}")
+""")
+
+
+@pytest.mark.slow
+class TestShardedCollective:
+    """Acceptance criterion: under shard_map the s-periodic center sync is
+    the program's ONLY cross-chain collective.  Runs in a subprocess so 4
+    host devices can be forced without polluting this process's JAX."""
+
+    @pytest.fixture(scope="class")
+    def sharded_output(self):
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (
+            env.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=4"
+        ).strip()
+        env["PYTHONPATH"] = (
+            os.path.join(os.path.dirname(__file__), "..", "src")
+            + os.pathsep + env.get("PYTHONPATH", "")
+        )
+        out = subprocess.run([sys.executable, "-c", _SHARDED_SCRIPT],
+                             capture_output=True, text=True, env=env, timeout=600)
+        assert out.returncode == 0, out.stderr[-3000:]
+        return out.stdout
+
+    def test_exactly_one_collective_in_scan_body(self, sharded_output):
+        """The scan body appears once in the lowered program; the pmean of
+        the sync branch must be its only collective (one per sync period at
+        runtime), and no other collective kinds may appear."""
+        line = [l for l in sharded_output.splitlines() if l.startswith("COLLECTIVES")][0]
+        fields = dict(kv.split("=") for kv in line.split()[1:])
+        assert int(fields["allreduce"]) == 1, line
+        assert int(fields["others"]) == 0, line
+
+    def test_sharded_run_stays_coupled(self, sharded_output):
+        line = [l for l in sharded_output.splitlines() if l.startswith("RUN")][0]
+        fields = dict(kv.split("=") for kv in line.split()[1:])
+        assert fields["ok"] == "True"
+        # alpha=1 coupling pulls the post-burn-in mean toward MU and keeps
+        # chains from drifting apart
+        assert abs(float(fields["mean0"]) - 2.0) < 0.5, line
+        assert abs(float(fields["mean1"]) + 1.0) < 0.5, line
+        assert float(fields["spread"]) < 3.0, line
+
+    def test_replicated_center_stays_replicated(self, sharded_output):
+        """Center state is replicated by spec (check_rep=False hides
+        violations): every shard must compute bit-identical center noise
+        from the shard-invariant step key."""
+        line = [l for l in sharded_output.splitlines() if l.startswith("CENTER")][0]
+        assert float(line.split("=")[1]) == 0.0, line

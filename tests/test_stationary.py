@@ -19,6 +19,7 @@ import pytest
 
 from repro import core
 from repro import diagnostics as diag
+from repro.run import rollout
 
 MU = 1.5  # per-dimension target mean (non-zero to catch mean bugs)
 LAM = 1.0  # target precision: U = (lam/2)||theta - mu||^2
@@ -26,28 +27,23 @@ D = 2  # parameter dimensions (iid under the isotropic target)
 
 
 def run_chains(sampler, shape, steps, burn, seed=0):
-    """Drive a sampler with exact gradients; return (K, T, D) trajectory
-    (K=1 axis inserted for unstacked samplers).  Moments are ALSO streamed
-    through the Welford accumulator inside the scan and cross-checked, so
-    the battery exercises the streaming path every run."""
+    """Drive a sampler with exact gradients through the device-resident
+    executor (``repro.run.rollout`` — the same chunked-scan program every
+    production driver uses); return (K, T, D) trajectory (K=1 axis inserted
+    for unstacked samplers).  Moments are ALSO streamed through the Welford
+    accumulator riding the scan carry and cross-checked, so the battery
+    exercises the in-carry diagnostics path every run.  Gradients are
+    evaluated at ``Sampler.grad_targets`` (stale worker snapshots for the
+    approach-I baseline), which the battery's old hand-rolled scan got
+    wrong — it could not have gated ``async_sghmc`` at all."""
     params0 = jnp.full(shape, MU + 1.0, jnp.float32)  # off-target start
-    state0 = sampler.init(params0)
-
-    def body(carry, key):
-        p, st, wf = carry
-        g = LAM * (p - MU)
-        upd, st = sampler.update(g, st, params=p, rng=key)
-        p = core.apply_updates(p, upd)
-        return (p, st, diag.welford_add(wf, p)), p
-
-    @jax.jit
-    def run(keys):
-        wf0 = diag.welford_init(params0)
-        return jax.lax.scan(body, (params0, state0, wf0), keys)
-
     keys = jax.random.split(jax.random.PRNGKey(seed), steps)
-    (_, _, wf), traj = run(keys)
-    traj = np.asarray(traj)  # (steps, *shape)
+    res = rollout(
+        sampler, lambda th: LAM * (th - MU), params0,
+        num_steps=steps, keys=keys, moments=True, chunk_steps=8192,
+    )
+    wf = res.moments
+    traj = np.asarray(res.trace)  # (steps, *shape)
 
     # Welford over the full run must equal the trajectory moments exactly
     # (the scan-streaming path is what big runs use instead of a trajectory).
@@ -141,6 +137,45 @@ class TestSGLDStationary:
         traj = run_chains(s, (4, D), steps=30_000, burn=2_000)
         oracle = diag.sgld_stationary(step_size=0.1, precision=LAM, mu=MU)
         assert_matches_oracle(traj, oracle, label="sgld")
+
+
+class TestAsyncSGHMCStationary:
+    """The paper's naive approach-I baseline, gated against the exact
+    delay-augmented oracle: a worker arriving at step t pushes the gradient
+    of the snapshot it pulled s steps earlier, so the server recursion has
+    a pure feedback lag whose stationary variance the oracle solves in
+    closed form.  s=1 is synchronous-parallel SGHMC; larger s inflates the
+    variance — the degradation EC-SGHMC is designed to avoid."""
+
+    @pytest.mark.parametrize("s", [1, 4])
+    def test_oracle(self, s):
+        sampler = core.async_sghmc(
+            step_size=0.1, num_workers=4, friction=1.0, sync_every=s
+        )
+        traj = run_chains(sampler, (D,), steps=40_000, burn=4_000, seed=3 + s)
+        oracle = diag.async_sghmc_stationary(
+            step_size=0.1, friction=1.0, sync_every=s, precision=LAM, mu=MU
+        )
+        assert_matches_oracle(traj, oracle, label=f"async-s{s}")
+
+    def test_s1_is_synchronous_sghmc(self):
+        """With s=1 every worker reports every step at the current params:
+        the oracle must coincide with plain SGHMC exactly."""
+        o_async = diag.async_sghmc_stationary(step_size=0.1, friction=1.0,
+                                              sync_every=1, precision=LAM, mu=MU)
+        o_sg = diag.sghmc_stationary(step_size=0.1, friction=1.0,
+                                     noise_convention="eq4", precision=LAM, mu=MU)
+        assert o_async.theta_var == pytest.approx(o_sg.theta_var, rel=1e-12)
+
+    def test_staleness_inflates_variance(self):
+        """§2 of the paper, quantified: the oracle's θ-variance must grow
+        monotonically with the staleness period."""
+        vs = [
+            diag.async_sghmc_stationary(step_size=0.1, friction=1.0, sync_every=s,
+                                        precision=LAM, mu=MU).theta_var
+            for s in (1, 2, 4, 8)
+        ]
+        assert vs == sorted(vs) and vs[-1] > 1.2 * vs[0], vs
 
 
 # the acceptance grid: alpha in {0, 1} x sync_every in {1, 8}; eq6 noise,
