@@ -27,6 +27,7 @@ BENCHES = {
     "staleness": "staleness_sweep",  # paper §2 analysis
     "overhead": "sampler_overhead",  # sampler hot-loop + executor + fused kernel
     "roofline": "roofline",  # deliverable (g), reads dry-run artifacts
+    "serve": "serve_engine",  # continuous-batching BMA engine latency/throughput
 }
 
 # historical artifact names (ISSUE 4): fig1_toy -> BENCH_fig1.json
@@ -68,12 +69,18 @@ def _write_json(name: str, extra, seconds: float) -> None:
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--bench", nargs="*", default=list(BENCHES), choices=list(BENCHES))
+    ap.add_argument("bench_names", nargs="*", metavar="bench",
+                    help=f"positional bench names (same set as --bench): {', '.join(BENCHES)}")
+    ap.add_argument("--bench", nargs="*", default=None, choices=list(BENCHES))
     ap.add_argument("--no-json", action="store_true", help="skip BENCH_*.json artifacts")
     args = ap.parse_args(argv)
+    unknown = [b for b in args.bench_names if b not in BENCHES]
+    if unknown:
+        ap.error(f"unknown bench(es) {unknown}; choose from {list(BENCHES)}")
+    benches = ((args.bench or []) + args.bench_names) or list(BENCHES)
     print("name,us_per_call,derived")
     failures = []
-    for name in args.bench:
+    for name in benches:
         mod_name = BENCHES[name]
         t0 = time.time()
         try:

@@ -1,0 +1,124 @@
+"""Serving-engine latency/throughput bench (``BENCH_serve.json``).
+
+Drives the continuous-batching posterior-predictive engine
+(``repro.serve.engine``) with open-loop synthetic request traces on the
+smoke-sized qwen3 config and records, per (slots, K, offered-load)
+configuration: p50/p99 request latency, p50/p99 first-token latency, and
+aggregate tokens/s — the serving tier's perf trajectory across PRs.  One
+configuration additionally runs with live snapshot refresh enabled to price
+the refresh cost in-band.
+
+CSV rows keep the historical ``name,us_per_call,derived`` shape:
+us_per_call = mean decode-step wall time, derived = tokens/s.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro import configs
+from repro.models import get_model, init_params
+from repro.launch.serve import _live_refresher
+from repro.serve.engine import ServeEngine, SnapshotRegistry, synthetic_trace
+
+from common import QUICK, emit, record
+
+ARCH = "qwen3-0.6b"
+# (slots, K, mean_interarrival decode-steps): two slot widths x two ensemble
+# sizes, light and heavy offered load on the wider one
+GRID_QUICK = [
+    (2, 1, 2.0),
+    (4, 2, 2.0),
+    (4, 2, 0.5),
+]
+GRID_FULL = GRID_QUICK + [
+    (8, 4, 2.0),
+    (8, 4, 0.5),
+]
+
+
+def _members(cfg, model, k: int, seed: int = 0):
+    keys = jax.random.split(jax.random.PRNGKey(seed), k)
+    return jax.vmap(lambda kk: init_params(model.param_specs(cfg), kk))(keys)
+
+
+PROMPT_LENS = (8, 16)
+
+
+def _one_config(cfg, model, slots, k, interarrival, *, num_requests, max_new, refresh=False):
+    registry = SnapshotRegistry(_members(cfg, model, k))
+    refresher = None
+    if refresh:
+        refresher = _live_refresher(model.param_specs(cfg), jax.random.PRNGKey(7), registry)
+    engine = ServeEngine(
+        cfg, model, registry,
+        num_slots=slots, max_seq=max(PROMPT_LENS) + max_new,
+        refresher=refresher, refresh_every=8 if refresh else 0,
+    )
+    trace = synthetic_trace(
+        num_requests,
+        vocab_size=cfg.vocab_size,
+        prompt_lens=PROMPT_LENS,
+        max_new=max_new,
+        mean_interarrival=interarrival,
+        seed=1,
+    )
+    report = engine.run(trace)
+    assert report.trace_counts.get("decode") == 1, report.trace_counts
+    pct = report.latency_percentiles()
+    return report, pct
+
+
+def run():
+    cfg = configs.get_config(ARCH, smoke=True)
+    model = get_model(cfg)
+    grid = GRID_QUICK if QUICK else GRID_FULL
+    num_requests = 8 if QUICK else 32
+    max_new = 8 if QUICK else 24
+    configs_out = []
+    for slots, k, inter in grid:
+        report, pct = _one_config(
+            cfg, model, slots, k, inter, num_requests=num_requests, max_new=max_new
+        )
+        name = f"serve_s{slots}_k{k}_ia{inter:g}"
+        step_us = 1e6 * report.wall_s / max(report.decode_steps, 1)
+        emit(name, step_us, f"{report.tokens_per_s:.1f}tok/s")
+        configs_out.append(
+            {
+                "slots": slots,
+                "ensemble": k,
+                "mean_interarrival": inter,
+                "requests": len(report.results),
+                "total_tokens": report.total_tokens,
+                "decode_steps": report.decode_steps,
+                "wall_s": round(report.wall_s, 4),
+                "tokens_per_s": round(report.tokens_per_s, 2),
+                "decode_traces": report.trace_counts.get("decode"),
+                **{kk: round(v, 6) for kk, v in pct.items()},
+            }
+        )
+    # price the live-refresh path on the middle configuration
+    slots, k, inter = grid[1]
+    report, pct = _one_config(
+        cfg, model, slots, k, inter, num_requests=num_requests, max_new=max_new, refresh=True
+    )
+    emit(
+        f"serve_s{slots}_k{k}_refresh",
+        1e6 * report.wall_s / max(report.decode_steps, 1),
+        f"{report.tokens_per_s:.1f}tok/s",
+    )
+    configs_out.append(
+        {
+            "slots": slots,
+            "ensemble": k,
+            "mean_interarrival": inter,
+            "refresh_every": 8,
+            "snapshots_promoted": report.registry["promoted"],
+            "snapshots_rejected": report.registry["rejected"],
+            "refresh_wall_s": report.refresher["refresh_wall_s"],
+            "tokens_per_s": round(report.tokens_per_s, 2),
+            "wall_s": round(report.wall_s, 4),
+            **{kk: round(v, 6) for kk, v in pct.items()},
+        }
+    )
+    record("serve", {"arch": ARCH, "configs": configs_out})
+    return {"num_configs": len(configs_out)}

@@ -1,7 +1,11 @@
-"""Serving example: batched greedy decoding with a chain-ensemble —
-averaging the predictive distribution over K posterior samples (the reason
-one runs EC-SGHMC in the first place: Bayesian model averaging at serve
-time).
+"""Serving example: the posterior-predictive engine under a concurrent
+synthetic request trace.
+
+This is the paper's deliverable end to end: K elastically coupled chains
+produce a posterior ensemble; the engine serves Bayesian-model-averaged
+predictions with continuous batching (requests join decode slots
+mid-flight), and — second run — keeps refreshing the ensemble from a live
+sampler run at chunk boundaries, gated by the ensemble-spread check.
 
     PYTHONPATH=src python examples/serve_ensemble.py
 """
@@ -9,12 +13,16 @@ from repro.launch.serve import main as serve_main
 
 
 def main():
-    print("== single model ==")
-    serve_main(["--arch", "qwen3-0.6b", "--smoke", "--batch", "4",
-                "--prompt-len", "16", "--gen", "8"])
-    print("== 3-sample posterior ensemble ==")
-    serve_main(["--arch", "qwen3-0.6b", "--smoke", "--batch", "4",
-                "--prompt-len", "16", "--gen", "8", "--ensemble", "3"])
+    print("== continuous batching, frozen 3-member ensemble ==")
+    serve_main(["--arch", "qwen3-0.6b", "--smoke", "--engine",
+                "--slots", "4", "--requests", "10", "--prompt-len", "16",
+                "--gen", "8", "--ensemble", "3", "--interarrival", "2"])
+    print()
+    print("== live snapshot refresh + temperature/top-k sampling ==")
+    serve_main(["--arch", "qwen3-0.6b", "--smoke", "--engine",
+                "--slots", "4", "--requests", "10", "--prompt-len", "16",
+                "--gen", "8", "--ensemble", "3", "--interarrival", "2",
+                "--refresh-every", "6", "--temperature", "0.8", "--top-k", "40"])
 
 
 if __name__ == "__main__":

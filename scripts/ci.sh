@@ -31,6 +31,8 @@ python -m pytest -x -q -m "not slow" "$@"
 if [[ "${SKIP_BENCH:-0}" != "1" ]]; then
   echo "== bench smoke: overhead (writes BENCH_overhead.json) =="
   REPRO_BENCH_QUICK=1 python -m benchmarks.run --bench overhead
+  echo "== bench smoke: serve engine (tiny model, few slots/tokens; writes BENCH_serve.json) =="
+  REPRO_BENCH_QUICK=1 python -m benchmarks.run serve
 fi
 
 if [[ "${RUN_SLOW:-0}" == "1" ]]; then

@@ -1,10 +1,19 @@
-"""Serving launcher: batched greedy decoding (+ optional chain-ensemble
-posterior averaging — serve K posterior samples, average the predictive
-distribution: Bayesian model averaging, the reason one samples posteriors
-at all).
+"""Serving launcher.
+
+Two paths:
+
+* legacy single-stream decoding (+ ``ensemble_decode``, the vmapped
+  whole-batch Bayesian-model-averaging loop — kept as the simple reference
+  implementation);
+* ``--engine``: the continuous-batching posterior-predictive engine
+  (``repro.serve.engine``) — request-level scheduling over a fixed slot
+  axis, cache pooling, BMA over K ensemble members, and (``--refresh-every``)
+  live snapshot refresh from a background coupled-sampler run.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
       --batch 4 --prompt-len 16 --gen 8 --ensemble 2
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
+      --engine --slots 4 --requests 12 --ensemble 2 --refresh-every 8
 """
 from __future__ import annotations
 
@@ -17,12 +26,19 @@ import jax.numpy as jnp
 from repro import configs
 from repro import core
 from repro.models import get_model, init_params
+from repro.serve.engine import (
+    ChainRefresher,
+    ServeEngine,
+    SnapshotRegistry,
+    synthetic_trace,
+)
 from repro.serve.loop import (
     collect_ensemble,
     ensemble_diagnostics,
     make_decode_step,
     make_prefill_step,
 )
+from repro.serve.sampling import SamplingParams
 
 # prior-bootstrap ensemble: members are thinned SGLD draws from
 # N(params_init, PRIOR_SCALE^2 I) — a posterior stand-in when no sampled
@@ -33,15 +49,37 @@ _PREC = 1.0 / PRIOR_SCALE**2
 _EPS = 0.2 / _PREC  # eps*lam = 0.2: stable, mixes in ~5 steps
 
 
+def _prior_grad(center):
+    """grad of the bootstrap prior N(center, PRIOR_SCALE^2 I); leaf
+    broadcasting makes it work for unstacked and (K,...)-stacked params."""
+    return lambda p: jax.tree.map(lambda x, x0: _PREC * (x - x0), p, center)
+
+
 def _bootstrap_ensemble(specs, key, num: int):
     center = init_params(specs, key)
-    grad_fn = lambda p: jax.tree.map(lambda x, x0: _PREC * (x - x0), p, center)
     start = jax.tree.map(lambda x: x + 0.0, center)  # rollout donates its input
     members, res = collect_ensemble(
-        core.sgld(step_size=_EPS), grad_fn, start,
+        core.sgld(step_size=_EPS), _prior_grad(center), start,
         num_samples=num, key=jax.random.fold_in(key, 1), thin=16,
     )
     return members, res
+
+
+def _live_refresher(specs, key, registry: SnapshotRegistry, chunk_steps: int = 16):
+    """Background chain-stacked SGLD over the same bootstrap prior — the
+    live run whose chunk-boundary chain stack refreshes the registry."""
+    center = init_params(specs, key)
+    start = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (registry.num_members,) + x.shape) + 0.0, center
+    )
+    return ChainRefresher(
+        registry,
+        core.sgld(step_size=_EPS),
+        _prior_grad(center),
+        start,
+        key=jax.random.fold_in(key, 2),
+        chunk_steps=chunk_steps,
+    )
 
 
 def ensemble_decode(cfg, model, params_stack, batch, max_seq: int, num_tokens: int):
@@ -68,6 +106,53 @@ def ensemble_decode(cfg, model, params_stack, batch, max_seq: int, num_tokens: i
     return jnp.concatenate(out, axis=1)
 
 
+def _run_engine(args, cfg, model):
+    specs = model.param_specs(cfg)
+    key = jax.random.PRNGKey(args.seed)
+    k = max(args.ensemble, 1)
+    if k > 1:
+        members, res = _bootstrap_ensemble(specs, key, k)
+        print(f"ensemble: K={k} collected at {res.steps_per_s:.0f} steps/s")
+    else:
+        members = jax.tree.map(lambda x: x[None], init_params(specs, key))
+    registry = SnapshotRegistry(members)
+    refresher = None
+    if args.refresh_every and k > 1:
+        refresher = _live_refresher(specs, key, registry)
+    max_seq = args.prompt_len + args.gen + 1
+    engine = ServeEngine(
+        cfg, model, registry,
+        num_slots=args.slots, max_seq=max_seq,
+        sampling=SamplingParams(args.temperature, args.top_k),
+        bma=args.bma, eos_id=args.eos, seed=args.seed,
+        refresher=refresher, refresh_every=args.refresh_every,
+    )
+    trace = synthetic_trace(
+        args.requests,
+        vocab_size=cfg.vocab_size,
+        prompt_lens=(max(args.prompt_len // 2, 1), args.prompt_len),
+        max_new=args.gen,
+        mean_interarrival=args.interarrival,
+        seed=args.seed,
+    )
+    report = engine.run(trace)
+    pct = report.latency_percentiles()
+    print(
+        f"served {len(report.results)} requests / {report.total_tokens} tokens "
+        f"in {report.wall_s:.2f}s ({report.tokens_per_s:.1f} tok/s, "
+        f"slots={args.slots}, K={k}, decode_traces={report.trace_counts.get('decode')})"
+    )
+    print(
+        f"latency p50={pct['latency_p50_s'] * 1e3:.1f}ms p99={pct['latency_p99_s'] * 1e3:.1f}ms  "
+        f"first-token p50={pct['first_token_p50_s'] * 1e3:.1f}ms "
+        f"p99={pct['first_token_p99_s'] * 1e3:.1f}ms"
+    )
+    if refresher is not None:
+        print(f"snapshots: {report.registry['version']} promoted, {report.registry['rejected']} rejected, "
+              f"{report.refresher['steps_done']} sampler steps")
+    return report
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=list(configs.ARCH_IDS))
@@ -77,10 +162,23 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=8)
     ap.add_argument("--ensemble", type=int, default=1, help="posterior samples to average")
     ap.add_argument("--seed", type=int, default=0)
+    # engine path
+    ap.add_argument("--engine", action="store_true", help="continuous-batching engine")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--interarrival", type=float, default=2.0, help="mean decode-steps between arrivals")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--bma", choices=("probs", "logprobs"), default="probs")
+    ap.add_argument("--eos", type=int, default=None)
+    ap.add_argument("--refresh-every", type=int, default=0,
+                    help="decode-step cadence of live snapshot refresh (0 = frozen members)")
     args = ap.parse_args(argv)
 
     cfg = configs.get_config(args.arch, smoke=args.smoke)
     model = get_model(cfg)
+    if args.engine:
+        return _run_engine(args, cfg, model)
     max_seq = args.prompt_len + args.gen + 1
     key = jax.random.PRNGKey(args.seed)
     batch = {"tokens": jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab_size)}

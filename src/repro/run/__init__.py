@@ -1,4 +1,4 @@
 """Device-resident run executor (scan-fused sampling drivers)."""
-from .executor import ChainExecutor, RunResult, rollout
+from .executor import ChainExecutor, ChunkSnapshot, RunResult, rollout
 
-__all__ = ["ChainExecutor", "RunResult", "rollout"]
+__all__ = ["ChainExecutor", "ChunkSnapshot", "RunResult", "rollout"]

@@ -65,6 +65,19 @@ def _is_typed_key(key) -> bool:
     return jnp.issubdtype(jnp.asarray(key).dtype, jax.dtypes.prng_key)
 
 
+class ChunkSnapshot(NamedTuple):
+    """One chunk-boundary observation from ``ChainExecutor.stream``:
+    ``step`` is the absolute step index at the boundary; ``params``/``state``
+    are defensive copies by default (the live carry is donated into the next
+    chunk's program, so holding the raw reference across iterations would be
+    a use-after-donate)."""
+
+    step: int
+    params: Any
+    state: Any
+    outs: Any
+
+
 class RunResult(NamedTuple):
     """Everything a driver can ask the executor for.  ``trace``/``stats``
     are time-major host arrays (sweep axis first when swept);
@@ -378,6 +391,49 @@ class ChainExecutor:
             steps=t_run,
             wall_s=wall,
         )
+
+    def stream(
+        self,
+        params,
+        state,
+        *,
+        num_steps: int,
+        key=None,
+        keys=None,
+        start_step: int = 0,
+        copy_snapshots: bool = True,
+    ):
+        """Chunk-boundary snapshot hook: a generator that advances the run
+        one chunk at a time and yields a :class:`ChunkSnapshot` at every
+        boundary — the host-side surface the serving tier's snapshot
+        registry refreshes ensemble members from (`repro.serve.engine`).
+
+        Unlike ``run`` nothing is accumulated across chunks: the caller owns
+        each boundary.  With ``copy_snapshots`` (default) the yielded
+        params/state are copies and stay valid after the generator advances;
+        pass False only if each snapshot is fully consumed before ``next()``
+        is called again — the live carry is donated into the next chunk.
+        The generator can be abandoned at any boundary (the carry's device
+        buffers are garbage-collected with it)."""
+        if self.key_mode == "keys" and keys is None:
+            raise ValueError("key_mode='keys' needs keys=")
+        if self.key_mode in ("fold", "carry") and key is None:
+            raise ValueError(f"key_mode={self.key_mode!r} needs key=")
+        if self.trace_fn is not None and num_steps % self.thin != 0:
+            raise ValueError("num_steps must be a multiple of thin when tracing")
+        if self.sampler_factory is not None:
+            raise ValueError("stream does not support sampler_factory mode")
+        copy = (lambda tr: jax.tree.map(lambda x: x.copy(), tr)) if copy_snapshots else (lambda tr: tr)
+        carry = self._init_carry(params, state, start_step, key, sweep=False)
+        t_run, t_abs = 0, int(start_step)
+        while t_run < num_steps:
+            n = min(self.chunk_steps, num_steps - t_run)
+            fn, n_outer, thin = self._compile(n, False, None)
+            xs = self._chunk_xs(t_run, t_abs, n, thin, keys, False)
+            carry, outs = fn(None, key, carry, xs)
+            t_run += n
+            t_abs += n
+            yield ChunkSnapshot(t_abs, copy(carry["params"]), copy(carry["state"]), outs)
 
     # -- shard_map chain routing -------------------------------------------
 

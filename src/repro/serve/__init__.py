@@ -1,1 +1,20 @@
-from .loop import make_decode_step, make_prefill_step
+from .loop import (
+    collect_ensemble,
+    ensemble_diagnostics,
+    generate,
+    make_decode_step,
+    make_prefill_step,
+)
+from .sampling import GREEDY, SamplingParams, mask_after_eos, select_tokens
+
+__all__ = [
+    "GREEDY",
+    "SamplingParams",
+    "collect_ensemble",
+    "ensemble_diagnostics",
+    "generate",
+    "make_decode_step",
+    "make_prefill_step",
+    "mask_after_eos",
+    "select_tokens",
+]

@@ -1,0 +1,29 @@
+"""Posterior-predictive serving engine (DESIGN.md §5).
+
+Continuous batching over a fixed slot axis (one compiled decode program;
+admissions/completions are data), a recycled per-slot cache pool with
+int8-parked idle caches, Bayesian model averaging over K ensemble members,
+and live snapshot refresh from a background coupled-sampler run gated by
+ensemble-spread diagnostics.
+"""
+from .bma import BMA_MODES, mixture_logprobs, reference_bma_decode
+from .cache_pool import CachePool, ParkedCache
+from .engine import ServeEngine, ServeReport
+from .registry import ChainRefresher, SnapshotRegistry
+from .scheduler import FCFSQueue, Request, RequestResult, synthetic_trace
+
+__all__ = [
+    "BMA_MODES",
+    "CachePool",
+    "ChainRefresher",
+    "FCFSQueue",
+    "ParkedCache",
+    "Request",
+    "RequestResult",
+    "ServeEngine",
+    "ServeReport",
+    "SnapshotRegistry",
+    "mixture_logprobs",
+    "reference_bma_decode",
+    "synthetic_trace",
+]

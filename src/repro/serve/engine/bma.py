@@ -1,0 +1,77 @@
+"""Bayesian model averaging across the ensemble-member axis.
+
+The paper's deliverable is K elastically coupled chains whose *product* is
+a posterior-predictive: p(y|x) = (1/K) Σ_k p(y|x, θ_k).  ``mixture_logprobs``
+reduces per-member logits (K, ..., V) to the mixture's log-probs in f32:
+
+* ``"probs"``     — log((1/K) Σ_k softmax(logits_k)): the exact BMA
+  arithmetic mixture (what ``launch.serve.ensemble_decode`` always did);
+* ``"logprobs"``  — log-prob averaging, softmax((1/K) Σ_k log softmax):
+  the re-normalized geometric mixture (product-of-experts), sharper than
+  the arithmetic one and cheaper to fuse — offered because temperature
+  sampling composes naturally with it.
+
+``reference_bma_decode`` is the sequential per-member oracle the engine is
+verified against (tests/test_serve_engine.py): a plain Python loop over
+members, each with its own cache, combined step-by-step with the same
+mixture + selection helpers.  Slow by construction, trusted by inspection.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.serve.sampling import GREEDY, SamplingParams, mask_after_eos, select_tokens
+
+BMA_MODES = ("probs", "logprobs")
+
+
+def mixture_logprobs(logits, mode: str = "probs"):
+    """(K, ..., V) per-member logits -> (..., V) mixture log-probs (f32)."""
+    if mode not in BMA_MODES:
+        raise ValueError(f"mode must be one of {BMA_MODES}, got {mode!r}")
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    if mode == "probs":
+        return jax.nn.logsumexp(lp, axis=0) - jnp.log(jnp.float32(lp.shape[0]))
+    return jax.nn.log_softmax(jnp.mean(lp, axis=0), axis=-1)
+
+
+def reference_bma_decode(
+    cfg,
+    model,
+    member_list,
+    batch,
+    max_seq: int,
+    num_tokens: int,
+    *,
+    mode: str = "probs",
+    sampling: SamplingParams = GREEDY,
+    key=None,
+    eos_id: int | None = None,
+    pad_id: int = 0,
+):
+    """Sequential per-member reference: K separate prefill/decode streams,
+    mixed per step.  Returns (tokens (B, num_tokens), logprob trace
+    (num_tokens, B, V)) — tokens post-EOS masked like the engine's."""
+    step_key = lambda i: None if key is None else jax.random.fold_in(key, i)
+    logits_k, caches = [], []
+    for p in member_list:
+        logits, cache = model.prefill(cfg, p, batch, max_seq)
+        logits_k.append(logits[:, -1])
+        caches.append(cache)
+    logp = mixture_logprobs(jnp.stack(logits_k), mode)  # (B, V)
+    tok = select_tokens(logp, step_key(0), sampling)[:, None]
+    out, trace = [tok], [logp]
+    for i in range(num_tokens - 1):
+        logits_k = []
+        for j, p in enumerate(member_list):
+            logits, caches[j] = model.decode_step(cfg, p, caches[j], tok)
+            logits_k.append(logits[:, -1])
+        logp = mixture_logprobs(jnp.stack(logits_k), mode)
+        tok = select_tokens(logp, step_key(i + 1), sampling)[:, None]
+        out.append(tok)
+        trace.append(logp)
+    seq = jnp.concatenate(out, axis=1)
+    if eos_id is not None:
+        seq = mask_after_eos(seq, eos_id, pad_id)
+    return seq, jnp.stack(trace)

@@ -1,0 +1,338 @@
+"""Posterior-predictive serving engine: continuous batching over a fixed
+slot axis, Bayesian model averaging over K ensemble members, live snapshot
+refresh from the coupled sampler.
+
+The structural invariant (pinned by ``tests/test_serve_engine.py``): the
+decode hot path is ONE compiled program.  Its signature is
+``(members (K,...), pooled caches (K, S, ...), tokens (S,1), done (S,),
+budget (S,), key)`` — every quantity that changes as requests join, finish,
+or the ensemble refreshes is *data* (masks, slot-indexed writes, swapped
+member pytrees of identical shape), never a shape.  Admission compiles once
+per distinct prompt length (prefill is length-shaped by nature; bucket
+prompts upstream if that matters), and writes the new request's K member
+caches into its slot with a traced slot index.
+
+Per-slot decode runs as ``vmap(member) ∘ vmap(slot)`` over the model's
+single-stream ``decode_step``, which gives every slot its own cache time
+pointer ``t`` — the property continuous batching needs and the batched
+legacy path lacked (one scalar ``t`` for the whole batch).  Done/free slots
+keep computing (fixed-shape batching burns their FLOPs regardless); their
+emissions are masked to ``pad_id`` and their cache writes land in slots
+whose validity masks hide them from any later request (positions are
+rewritten by the next prefill before they become attendable).
+
+The scheduler clock, admission policy and latency accounting live in
+``scheduler.py``; member health gating and live refresh in ``registry.py``;
+see DESIGN.md §5 for the full contract.
+"""
+from __future__ import annotations
+
+import time
+from collections import Counter
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.sampling import GREEDY, SamplingParams, select_tokens
+
+from .bma import BMA_MODES, mixture_logprobs
+from .cache_pool import CachePool
+from .registry import ChainRefresher, SnapshotRegistry
+from .scheduler import FCFSQueue, Request, RequestResult
+
+
+@dataclass
+class _Active:
+    result: RequestResult
+    submit_s: float
+    tokens: list = field(default_factory=list)
+    logprobs: list = field(default_factory=list)
+
+
+@dataclass
+class ServeReport:
+    """Aggregate outcome of one ``ServeEngine.run``: per-request results +
+    the latency/throughput numbers the serving benchmark records."""
+
+    results: list
+    wall_s: float
+    decode_steps: int
+    total_tokens: int
+    trace_counts: dict
+    pool: dict
+    registry: dict
+    refresher: dict | None
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.total_tokens / max(self.wall_s, 1e-12)
+
+    def latency_percentiles(self) -> dict:
+        """p50/p99 of request completion latency and first-token latency
+        (seconds, queueing included)."""
+        lat = np.asarray([r.latency_s for r in self.results], np.float64)
+        ftl = np.asarray([r.first_token_s for r in self.results], np.float64)
+        pct = lambda a, q: float(np.percentile(a, q)) if a.size else float("nan")
+        return {
+            "latency_p50_s": pct(lat, 50),
+            "latency_p99_s": pct(lat, 99),
+            "first_token_p50_s": pct(ftl, 50),
+            "first_token_p99_s": pct(ftl, 99),
+        }
+
+
+class ServeEngine:
+    """Continuous-batching BMA decode over a pooled slot axis.
+
+    ``members``: a (K, ...)-stacked parameter pytree or a
+    :class:`SnapshotRegistry` (live refresh).  ``refresher`` (optional, a
+    :class:`ChainRefresher` bound to the same registry) is pumped every
+    ``refresh_every`` decode steps — stale members serve until the registry
+    promotes a candidate that passes the spread gate."""
+
+    def __init__(
+        self,
+        cfg,
+        model,
+        members,
+        *,
+        num_slots: int,
+        max_seq: int,
+        sampling: SamplingParams = GREEDY,
+        bma: str = "probs",
+        eos_id: int | None = None,
+        pad_id: int = 0,
+        cache_dtype=None,
+        refresher: ChainRefresher | None = None,
+        refresh_every: int = 0,
+        compress_parked: bool = False,
+        record_logprobs: bool = False,
+        seed: int = 0,
+    ):
+        if bma not in BMA_MODES:
+            raise ValueError(f"bma must be one of {BMA_MODES}")
+        self.cfg, self.model = cfg, model
+        self.registry = members if isinstance(members, SnapshotRegistry) else SnapshotRegistry(members)
+        self.sampling = sampling
+        self.bma = bma
+        self.eos_id = eos_id
+        self.pad_id = int(pad_id)
+        self.max_seq = int(max_seq)
+        self.cache_dtype = cache_dtype
+        self.refresher = refresher
+        self.refresh_every = int(refresh_every)
+        if refresher is not None and refresher.registry is not self.registry:
+            raise ValueError("refresher must feed this engine's registry")
+        self.record_logprobs = bool(record_logprobs)
+        self.pool = CachePool(
+            cfg,
+            model,
+            num_members=self.registry.num_members,
+            num_slots=num_slots,
+            max_seq=max_seq,
+            dtype=cache_dtype or cfg.compute_dtype,
+            compress_parked=compress_parked,
+        )
+        S = self.pool.num_slots
+        self._tokens = jnp.full((S, 1), self.pad_id, jnp.int32)
+        self._done = jnp.ones((S,), bool)
+        self._budget = jnp.zeros((S,), jnp.int32)
+        base = jax.random.PRNGKey(seed)
+        self._key_decode = jax.random.fold_in(base, 0)
+        self._key_admit = jax.random.fold_in(base, 1)
+        self.trace_counts: Counter = Counter()
+        self.decode_steps = 0
+        # the two compiled entry points; caches are donated through both so
+        # the pool's buffers are recycled in place, never copied per tick
+        self._decode = jax.jit(self._decode_fn, donate_argnums=(1,))
+        self._admit = jax.jit(self._admit_fn, donate_argnums=(1,))
+
+    # -- compiled programs --------------------------------------------------
+
+    @property
+    def decode_trace_count(self) -> int:
+        """How many times the decode program has been (re)traced — the
+        continuous-batching acceptance pin asserts this stays at 1."""
+        return self.trace_counts["decode"]
+
+    def _eos_hits(self, tok):
+        if self.eos_id is None:
+            return jnp.zeros(tok.shape, bool)
+        return tok == self.eos_id
+
+    def _decode_fn(self, members, caches, tokens, done, budget, key):
+        self.trace_counts["decode"] += 1  # trace-time side effect only
+
+        def member_step(p, c):
+            def slot_step(cs, tok):
+                logits, new_cs = self.model.decode_step(self.cfg, p, cs, tok[None])
+                return logits[0, 0], new_cs  # (V,), slot cache
+
+            return jax.vmap(slot_step)(c, tokens)
+
+        logits, new_caches = jax.vmap(member_step)(members, caches)  # (K, S, V)
+        logp = mixture_logprobs(logits, self.bma)  # (S, V)
+        tok = select_tokens(logp, key, self.sampling)  # (S,)
+        newly_done = (~done) & (self._eos_hits(tok) | (budget <= 1))
+        emit = jnp.where(done, jnp.int32(self.pad_id), tok)
+        next_done = done | newly_done
+        feed = jnp.where(next_done, jnp.int32(self.pad_id), tok)[:, None]
+        return emit, feed, new_caches, next_done, budget - 1, logp
+
+    def _admit_fn(self, members, caches, tokens, done, budget, prompt, slot, max_new, key):
+        self.trace_counts[f"admit_len{prompt.shape[-1]}"] += 1
+
+        def member_prefill(p):
+            return self.model.prefill(
+                self.cfg, p, {"tokens": prompt}, self.max_seq, self.cache_dtype
+            )
+
+        logits, slot_cache = jax.vmap(member_prefill)(members)  # (K,1,1,V), (K,...)
+        new_caches = jax.tree.map(
+            lambda full, one: jax.lax.dynamic_update_index_in_dim(
+                full, one.astype(full.dtype), slot, 1
+            ),
+            caches,
+            slot_cache,
+        )
+        logp = mixture_logprobs(logits[:, 0, -1], self.bma)  # (V,)
+        tok = select_tokens(logp, key, self.sampling)  # scalar
+        slot_done = self._eos_hits(tok) | (max_new <= 1)
+        feed = jnp.where(slot_done, jnp.int32(self.pad_id), tok)
+        tokens = tokens.at[slot, 0].set(feed)
+        done = done.at[slot].set(slot_done)
+        budget = budget.at[slot].set(max_new - 1)
+        return new_caches, tokens, done, budget, tok, slot_done, logp
+
+    # -- serving loop -------------------------------------------------------
+
+    def _finalize(self, slot, act: _Active, step: int, now: float, results: list):
+        r = act.result
+        r.tokens = np.asarray(act.tokens, np.int32)
+        r.finished_step = step
+        r.latency_s = now - act.submit_s
+        r.hit_eos = self.eos_id is not None and r.num_tokens > 0 and int(r.tokens[-1]) == self.eos_id
+        if self.record_logprobs:
+            r.logprobs = np.asarray(act.logprobs, np.float32)
+        results.append(r)
+        self.pool.release(slot)
+
+    def _do_admit(self, req: Request, step: int, submit_s: float, active: dict, results: list, wall):
+        need = int(req.prompt.size) + req.max_new
+        if need > self.max_seq:
+            # the non-windowed cache write clamps at max_seq-1, which would
+            # silently corrupt the tail — refuse instead
+            raise ValueError(
+                f"request {req.rid}: prompt_len + max_new = {need} exceeds "
+                f"engine max_seq={self.max_seq}"
+            )
+        slot = self.pool.acquire()
+        key = jax.random.fold_in(self._key_admit, req.rid)
+        prompt = jnp.asarray(req.prompt)[None]
+        out = self._admit(
+            self.registry.members,
+            self.pool.caches,
+            self._tokens,
+            self._done,
+            self._budget,
+            prompt,
+            jnp.int32(slot),
+            jnp.int32(req.max_new),
+            key,
+        )
+        self.pool.caches, self._tokens, self._done, self._budget, tok, slot_done, logp = out
+        now = wall()
+        res = RequestResult(rid=req.rid, prompt_len=int(req.prompt.size), admitted_step=step)
+        res.first_token_s = now - submit_s
+        act = _Active(result=res, submit_s=submit_s, tokens=[int(tok)])
+        if self.record_logprobs:
+            act.logprobs.append(np.asarray(logp))
+        if bool(slot_done):
+            self._finalize(slot, act, step, now, results)
+        else:
+            active[slot] = act
+
+    def run(self, requests, *, max_steps: int | None = None) -> ServeReport:
+        """Serve ``requests`` (a list of :class:`Request`) to completion.
+
+        The loop per scheduler tick: (1) admit pending arrivals into free
+        slots (prefill-on-admit, first token emitted), (2) pump the snapshot
+        refresher on its cadence, (3) one compiled decode step for the whole
+        slot axis, (4) collect emissions, finalize and recycle finished
+        slots.  Idle periods (no active slots, future arrivals) fast-forward
+        the tick clock.  Hitting ``max_steps`` finalizes the in-flight
+        requests with whatever they emitted (``truncated=True``) and
+        recycles their slots; still-pending requests are simply dropped."""
+        queue = FCFSQueue(requests)
+        active: dict[int, _Active] = {}
+        results: list[RequestResult] = []
+        submit_s: dict[int, float] = {}
+        step = 0
+        last_refresh = 0
+        steps_at_start = self.decode_steps
+        t0 = time.perf_counter()
+        wall = lambda: time.perf_counter() - t0
+        budget_steps = max_steps if max_steps is not None else 1 << 60
+        while (len(queue) or active) and step < budget_steps:
+            if not active and len(queue) and queue.next_arrival() > step:
+                step = queue.next_arrival()  # idle: jump to the next arrival
+            for r in queue.visible(step):
+                submit_s.setdefault(r.rid, wall())  # schedulable => clock starts
+            while self.pool.free_slots:
+                req = queue.admissible(step)
+                if req is None:
+                    break
+                self._do_admit(req, step, submit_s[req.rid], active, results, wall)
+            if (
+                self.refresher is not None
+                and self.refresh_every
+                and step - last_refresh >= self.refresh_every
+            ):
+                self.refresher.refresh()
+                last_refresh = step
+            if active:
+                key = jax.random.fold_in(self._key_decode, step)
+                emit, feed, caches, done, budget, logp = self._decode(
+                    self.registry.members,
+                    self.pool.caches,
+                    self._tokens,
+                    self._done,
+                    self._budget,
+                    key,
+                )
+                self.pool.caches = caches
+                self._tokens, self._done, self._budget = feed, done, budget
+                self.decode_steps += 1
+                emit_np = np.asarray(emit)
+                done_np = np.asarray(done)
+                logp_np = np.asarray(logp) if self.record_logprobs else None
+                now = wall()
+                for slot, act in list(active.items()):
+                    act.tokens.append(int(emit_np[slot]))
+                    if self.record_logprobs:
+                        act.logprobs.append(logp_np[slot])
+                    if done_np[slot]:
+                        self._finalize(slot, act, step, now, results)
+                        del active[slot]
+            step += 1
+        if active:  # max_steps truncation: finalize + recycle in-flight slots
+            self._done = self._done.at[jnp.asarray(sorted(active), jnp.int32)].set(True)
+            now = wall()
+            for slot, act in list(active.items()):
+                act.result.truncated = True
+                self._finalize(slot, act, step, now, results)
+                del active[slot]
+        results.sort(key=lambda r: r.rid)
+        return ServeReport(
+            results=results,
+            wall_s=wall(),
+            decode_steps=self.decode_steps - steps_at_start,
+            total_tokens=sum(r.num_tokens for r in results),
+            trace_counts=dict(self.trace_counts),
+            pool=self.pool.stats(),
+            registry=self.registry.stats(),
+            refresher=self.refresher.stats() if self.refresher else None,
+        )

@@ -1,0 +1,146 @@
+"""Snapshot registry: the serving engine's source of ensemble members,
+refreshed live from a background coupled-sampler run.
+
+The paper's robustness argument is exactly what makes this sound: EC-SGHMC
+is *designed* to tolerate a noisy/stale center (the staleness and
+quantization perturbations are absorbed into the center-noise covariance C
+of Eq. 6), so serving from members that lag the live chains by up to one
+executor chunk — and swapping them mid-flight — is a controlled
+perturbation of the same kind, unlike naive async whose stale gradients
+enter the dynamics directly (Chen et al., stale-gradient SG-MCMC).
+
+Promotion is GATED: ``propose`` runs ``ensemble_diagnostics`` on the
+candidate stack and refuses a collapsed ensemble (spread below
+``min_rel_spread``) — K identical members silently degrade Bayesian model
+averaging to one model's predictions, and the registry is where that must
+be caught, before the stack ever serves.  Stale members keep serving until
+a candidate passes.
+
+``ChainRefresher`` drives the background run cooperatively through
+``ChainExecutor.stream`` (the chunk-boundary snapshot hook): each
+``refresh()`` advances the sampler one chunk and proposes the live chain
+stack.  Cooperative (caller-paced) rather than threaded keeps the whole
+engine deterministic — the serving loop decides how often it pays the
+refresh cost, and a given (trace, seed, cadence) always reproduces.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any
+
+import jax
+
+from repro.run import ChainExecutor
+from repro.serve.loop import ensemble_diagnostics
+
+
+class SnapshotRegistry:
+    """Holds the currently-serving (K, ...)-stacked ensemble; ``propose``
+    swaps it atomically iff the candidate passes the spread gate."""
+
+    def __init__(self, members, *, min_rel_spread: float = 1e-6, validate: bool = False):
+        self.min_rel_spread = float(min_rel_spread)
+        self.members = members
+        self.num_members = int(jax.tree.leaves(members)[0].shape[0])
+        self.version = 0
+        self.promoted = 0
+        self.rejected = 0
+        self.last_health: dict | None = None
+        if validate:
+            health = ensemble_diagnostics(members, min_rel_spread=self.min_rel_spread)
+            self.last_health = health
+            if health["collapsed"]:
+                raise ValueError(
+                    f"initial ensemble is collapsed (rel_spread={health['rel_spread']:.3e})"
+                )
+
+    def propose(self, candidate) -> bool:
+        """Gate + swap.  Returns True iff ``candidate`` was promoted; on
+        rejection the previous members keep serving unchanged."""
+        k = int(jax.tree.leaves(candidate)[0].shape[0])
+        if k != self.num_members:
+            raise ValueError(f"candidate has K={k}, registry serves K={self.num_members}")
+        health = ensemble_diagnostics(candidate, min_rel_spread=self.min_rel_spread)
+        self.last_health = health
+        if health["collapsed"]:
+            self.rejected += 1
+            return False
+        self.members = candidate
+        self.version += 1
+        self.promoted += 1
+        return True
+
+    def stats(self) -> dict:
+        return {
+            "version": self.version,
+            "promoted": self.promoted,
+            "rejected": self.rejected,
+            "num_members": self.num_members,
+            "last_health": self.last_health,
+        }
+
+
+class ChainRefresher:
+    """Cooperative background sampler feeding a :class:`SnapshotRegistry`.
+
+    ``params`` must be the (K, ...)-stacked chain state of a chain-parallel
+    sampler (EC-SGLD / EC-SGHMC / chainwise SGLD) whose live stack IS the
+    candidate ensemble.  Each ``refresh()`` advances exactly one executor
+    chunk (``chunk_steps`` sampler steps) and proposes the resulting stack;
+    after ``total_steps`` the run is exhausted and ``refresh()`` returns
+    False forever.  ``members_of`` maps the raw chain stack to the served
+    parameter stack (default: identity)."""
+
+    def __init__(
+        self,
+        registry: SnapshotRegistry,
+        sampler,
+        grad_fn,
+        params,
+        *,
+        key,
+        state=None,
+        chunk_steps: int = 64,
+        total_steps: int = 1 << 30,
+        members_of=None,
+    ):
+        self.registry = registry
+        self.members_of = members_of or (lambda p: p)
+        ex = ChainExecutor(
+            sampler=sampler,
+            grad_fn=lambda targets, _batch: grad_fn(targets),
+            chunk_steps=chunk_steps,
+            key_mode="fold",
+        )
+        if state is None:
+            state = sampler.init(params)
+        self._stream = ex.stream(params, state, num_steps=total_steps, key=key)
+        self.chunk_steps = int(chunk_steps)
+        self.steps_done = 0
+        self.refreshes = 0
+        self.refresh_wall_s = 0.0
+        self.exhausted = False
+
+    def refresh(self) -> bool:
+        """Advance one chunk, propose the live stack.  Returns True iff a
+        new snapshot was promoted."""
+        if self.exhausted:
+            return False
+        t0 = time.perf_counter()
+        try:
+            snap = next(self._stream)
+        except StopIteration:
+            self.exhausted = True
+            return False
+        self.refresh_wall_s += time.perf_counter() - t0
+        self.steps_done = snap.step
+        self.refreshes += 1
+        return self.registry.propose(self.members_of(snap.params))
+
+    def stats(self) -> dict:
+        return {
+            "refreshes": self.refreshes,
+            "steps_done": self.steps_done,
+            "refresh_wall_s": round(self.refresh_wall_s, 4),
+            "exhausted": self.exhausted,
+        }

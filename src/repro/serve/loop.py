@@ -1,7 +1,11 @@
-"""Serving steps: prefill (prompt -> cache) and greedy decode.
+"""Serving steps: prefill (prompt -> cache) and single-token decode.
 
 ``decode_step``/``serve_step`` is what the decode_* and long_* dry-run cells
-lower: one new token against a KV/recurrent cache of seq_len.
+lower: one new token against a KV/recurrent cache of seq_len.  Token
+selection goes through the shared ``repro.serve.sampling`` helper
+(greedy / temperature / top-k), the same one the continuous-batching
+engine (``repro.serve.engine``) uses — legacy and engine paths sample
+identically given the same logits and key.
 
 ``ensemble_diagnostics`` reports the dispersion of a chain-ensemble before
 it serves: a collapsed ensemble (zero spread) silently degrades Bayesian
@@ -22,21 +26,28 @@ from repro.diagnostics import ensemble_spread
 from repro.models import ModelDef
 from repro.models.common import ModelConfig
 from repro.run import rollout
+from repro.serve.sampling import GREEDY, SamplingParams, mask_after_eos, select_tokens
 
 
-def make_prefill_step(cfg: ModelConfig, model: ModelDef, max_seq: int, cache_dtype=None):
-    def prefill_step(params, batch):
+def make_prefill_step(
+    cfg: ModelConfig,
+    model: ModelDef,
+    max_seq: int,
+    cache_dtype=None,
+    sampling: SamplingParams = GREEDY,
+):
+    def prefill_step(params, batch, key=None):
         logits, cache = model.prefill(cfg, params, batch, max_seq, cache_dtype)
-        next_tokens = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        next_tokens = select_tokens(logits[:, -1], key, sampling)[:, None]
         return next_tokens, cache
 
     return prefill_step
 
 
-def make_decode_step(cfg: ModelConfig, model: ModelDef):
-    def serve_step(params, cache, tokens):
+def make_decode_step(cfg: ModelConfig, model: ModelDef, sampling: SamplingParams = GREEDY):
+    def serve_step(params, cache, tokens, key=None):
         logits, new_cache = model.decode_step(cfg, params, cache, tokens)
-        next_tokens = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        next_tokens = select_tokens(logits[:, -1], key, sampling)[:, None]
         return next_tokens, new_cache
 
     return serve_step
@@ -87,13 +98,42 @@ def collect_ensemble(
     return members, res
 
 
-def generate(cfg: ModelConfig, model: ModelDef, params, batch, max_seq: int, num_tokens: int):
-    """Host-side greedy generation loop (examples / integration tests)."""
-    prefill = jax.jit(make_prefill_step(cfg, model, max_seq))
-    step = jax.jit(make_decode_step(cfg, model))
-    tok, cache = prefill(params, batch)
+def generate(
+    cfg: ModelConfig,
+    model: ModelDef,
+    params,
+    batch,
+    max_seq: int,
+    num_tokens: int,
+    *,
+    sampling: SamplingParams = GREEDY,
+    key=None,
+    eos_id: int | None = None,
+    pad_id: int = 0,
+):
+    """Host-side generation loop (examples / integration tests).
+
+    Stops as soon as EVERY sequence has emitted ``eos_id`` (when given)
+    instead of always decoding to the full ``num_tokens`` budget, and masks
+    everything after each row's first EOS with ``pad_id`` — so the returned
+    array may have fewer than ``num_tokens`` columns.  ``sampling``/``key``
+    select tokens through the shared helper (greedy by default)."""
+    if sampling.temperature > 0 and key is None:
+        raise ValueError("temperature > 0 sampling needs key=")
+    prefill = jax.jit(make_prefill_step(cfg, model, max_seq, sampling=sampling))
+    step = jax.jit(make_decode_step(cfg, model, sampling=sampling))
+    step_key = lambda i: None if key is None else jax.random.fold_in(key, i)
+    tok, cache = prefill(params, batch, step_key(0))
     out = [tok]
-    for _ in range(num_tokens - 1):
-        tok, cache = step(params, cache, tok)
+    done = (tok == eos_id) if eos_id is not None else None
+    for i in range(num_tokens - 1):
+        if eos_id is not None and bool(done.all()):
+            break
+        tok, cache = step(params, cache, tok, step_key(i + 1))
         out.append(tok)
-    return jnp.concatenate(out, axis=1)
+        if eos_id is not None:
+            done = done | (tok == eos_id)
+    seq = jnp.concatenate(out, axis=1)
+    if eos_id is not None:
+        seq = mask_after_eos(seq, eos_id, pad_id)
+    return seq

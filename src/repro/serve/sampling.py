@@ -1,0 +1,62 @@
+"""Token selection shared by every serving path (legacy loop + engine).
+
+One helper, one convention: ``select_tokens(logits, key, sampling)`` maps
+``(..., V)`` logits (or mixture log-probs — selection is shift-invariant
+per row) to int32 token ids.  ``temperature == 0`` is greedy argmax and
+needs no key; any positive temperature is an RNG-keyed categorical draw,
+optionally restricted to the top-k logits.  The engine's BMA decode and the
+legacy ``make_prefill_step``/``make_decode_step`` both call this, so the
+two paths sample identically given the same logits and key.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SamplingParams(NamedTuple):
+    """Selection policy.  ``temperature=0`` ⇒ greedy (key unused);
+    ``top_k=0`` ⇒ full-vocabulary support.  Both are Python-static: a policy
+    change is a (deliberate) recompile, an admission never is."""
+
+    temperature: float = 0.0
+    top_k: int = 0
+
+
+GREEDY = SamplingParams()
+
+
+def _top_k_mask(logits, k: int):
+    """-inf everything below the k-th largest logit per row."""
+    k = min(int(k), logits.shape[-1])
+    vals = jax.lax.top_k(logits, k)[0]
+    thresh = vals[..., -1:]
+    return jnp.where(logits < thresh, -jnp.inf, logits)
+
+
+def select_tokens(logits, key=None, sampling: SamplingParams = GREEDY):
+    """``logits (..., V)`` -> int32 tokens ``(...)``.
+
+    Greedy (``temperature == 0``) is exact argmax.  Otherwise logits are
+    scaled by ``1/temperature``, optionally top-k masked, and sampled with
+    ``jax.random.categorical`` — batched rows draw independent Gumbel noise
+    from the single ``key``.
+    """
+    if sampling.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if key is None:
+        raise ValueError("temperature > 0 sampling needs an RNG key")
+    scaled = logits.astype(jnp.float32) / float(sampling.temperature)
+    if sampling.top_k:
+        scaled = _top_k_mask(scaled, sampling.top_k)
+    return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+
+
+def mask_after_eos(tokens, eos_id: int, pad_id: int = 0):
+    """Replace every token strictly after the first ``eos_id`` per row with
+    ``pad_id`` (the EOS itself is kept).  tokens: (B, T) int."""
+    hit = tokens == eos_id
+    prior_hits = jnp.cumsum(hit.astype(jnp.int32), axis=-1) - hit.astype(jnp.int32)
+    return jnp.where(prior_hits > 0, jnp.asarray(pad_id, tokens.dtype), tokens)

@@ -1,0 +1,543 @@
+"""Serving-engine battery: continuous batching, BMA-vs-reference, cache
+pooling, snapshot registry gating, and the shared token-selection helper.
+
+The two acceptance pins from the issue live here:
+
+* ``test_single_decode_program`` — a trace with requests arriving
+  mid-decode lowers to ONE compiled decode program (no retrace per
+  admission), asserted on the engine's trace counter;
+* ``test_engine_matches_sequential_reference`` — engine BMA output (tokens
+  AND mixture log-prob trajectories) matches the sequential per-member
+  reference within float tolerance, per request, under staggered arrivals.
+"""
+from __future__ import annotations
+
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs, core
+from repro.models import get_model, init_params
+from repro.models.registry import ModelDef
+from repro.run import ChainExecutor
+from repro.serve import generate
+from repro.serve.engine import (
+    CachePool,
+    ChainRefresher,
+    Request,
+    ServeEngine,
+    SnapshotRegistry,
+    mixture_logprobs,
+    reference_bma_decode,
+    synthetic_trace,
+)
+from repro.serve.loop import ensemble_diagnostics
+from repro.serve.sampling import GREEDY, SamplingParams, mask_after_eos, select_tokens
+
+
+# ---------------------------------------------------------------------------
+# tiny real model + stub model
+# ---------------------------------------------------------------------------
+
+
+def tiny_cfg():
+    return configs.get_config("qwen3-0.6b", smoke=True).replace(
+        vocab_size=64, d_model=32, num_layers=2, num_heads=2, num_kv_heads=1,
+        head_dim=16, d_ff=48,
+    )
+
+
+def member_stack(cfg, model, k: int, seed: int = 0):
+    keys = jax.random.split(jax.random.PRNGKey(seed), k)
+    return jax.vmap(lambda kk: init_params(model.param_specs(cfg), kk))(keys)
+
+
+def members_list(stack, k):
+    return [jax.tree.map(lambda x: x[i], stack) for i in range(k)]
+
+
+STUB_VOCAB = 11
+
+
+def stub_model():
+    """Deterministic counter model: next token = (last + 1) % vocab, via
+    one-hot logits — exact EOS arithmetic with zero model noise.  Params
+    hold a per-member logit scale so BMA has something to average."""
+
+    def param_specs(cfg):
+        raise NotImplementedError
+
+    def prefill(cfg, params, batch, max_seq, cache_dtype=None):
+        tokens = batch["tokens"]
+        last = tokens[:, -1:]
+        logits = params["scale"] * jax.nn.one_hot(
+            (last + 1) % STUB_VOCAB, STUB_VOCAB, dtype=jnp.float32
+        )
+        return logits, {"t": jnp.asarray(tokens.shape[1], jnp.int32), "last": last}
+
+    def decode_step(cfg, params, cache, tokens):
+        logits = params["scale"] * jax.nn.one_hot(
+            (tokens + 1) % STUB_VOCAB, STUB_VOCAB, dtype=jnp.float32
+        )
+        return logits, {"t": cache["t"] + 1, "last": tokens}
+
+    def make_cache(cfg, batch, max_seq, dtype, abstract: bool = False):
+        tree = {
+            "t": jax.ShapeDtypeStruct((), jnp.int32),
+            "last": jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+        }
+        if abstract:
+            return tree
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), tree)
+
+    return ModelDef(param_specs, None, prefill, decode_step, make_cache, None)
+
+
+STUB_CFG = SimpleNamespace(compute_dtype=jnp.float32, vocab_size=STUB_VOCAB)
+
+
+def stub_members(k: int):
+    return {"scale": 10.0 * (1.0 + jnp.arange(k, dtype=jnp.float32)[:, None])}
+
+
+# ---------------------------------------------------------------------------
+# token selection helper (shared legacy/engine)
+# ---------------------------------------------------------------------------
+
+
+class TestSelectTokens:
+    def test_greedy_is_argmax(self):
+        logits = jax.random.normal(jax.random.PRNGKey(0), (5, 33))
+        np.testing.assert_array_equal(
+            np.asarray(select_tokens(logits)), np.argmax(np.asarray(logits), -1)
+        )
+
+    def test_greedy_needs_no_key_temperature_does(self):
+        logits = jnp.zeros((2, 8))
+        select_tokens(logits, None, GREEDY)
+        with pytest.raises(ValueError):
+            select_tokens(logits, None, SamplingParams(temperature=1.0))
+
+    def test_top_k_support(self):
+        key = jax.random.PRNGKey(1)
+        logits = jax.random.normal(key, (64, 40))
+        sp = SamplingParams(temperature=1.3, top_k=5)
+        toks = np.asarray(select_tokens(logits, key, sp))
+        top5 = np.argsort(np.asarray(logits), -1)[:, -5:]
+        assert all(toks[i] in top5[i] for i in range(64))
+
+    def test_top_k_1_any_temperature_is_greedy(self):
+        logits = jax.random.normal(jax.random.PRNGKey(2), (7, 19))
+        sp = SamplingParams(temperature=3.0, top_k=1)
+        np.testing.assert_array_equal(
+            np.asarray(select_tokens(logits, jax.random.PRNGKey(3), sp)),
+            np.asarray(select_tokens(logits)),
+        )
+
+    def test_sampling_deterministic_in_key(self):
+        logits = jax.random.normal(jax.random.PRNGKey(4), (16, 25))
+        sp = SamplingParams(temperature=0.7, top_k=10)
+        a = select_tokens(logits, jax.random.PRNGKey(5), sp)
+        b = select_tokens(logits, jax.random.PRNGKey(5), sp)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_mask_after_eos(self):
+        toks = jnp.array([[3, 7, 5, 7, 2], [1, 2, 3, 4, 5]])
+        out = np.asarray(mask_after_eos(toks, eos_id=7, pad_id=0))
+        np.testing.assert_array_equal(out, [[3, 7, 0, 0, 0], [1, 2, 3, 4, 5]])
+
+
+class TestBMAMath:
+    def test_probs_mode_is_arithmetic_mixture(self):
+        logits = jax.random.normal(jax.random.PRNGKey(0), (3, 2, 17))
+        lp = np.asarray(mixture_logprobs(logits, "probs"))
+        expect = np.log(np.mean(jax.nn.softmax(np.asarray(logits, np.float32), -1), 0))
+        np.testing.assert_allclose(lp, expect, atol=1e-6)
+
+    def test_logprobs_mode_normalized(self):
+        logits = jax.random.normal(jax.random.PRNGKey(1), (4, 5, 13))
+        lp = np.asarray(mixture_logprobs(logits, "logprobs"))
+        np.testing.assert_allclose(np.exp(lp).sum(-1), 1.0, atol=1e-6)
+
+    def test_k1_both_modes_are_log_softmax(self):
+        logits = jax.random.normal(jax.random.PRNGKey(2), (1, 3, 9))
+        expect = np.asarray(jax.nn.log_softmax(logits[0], -1))
+        for mode in ("probs", "logprobs"):
+            np.testing.assert_allclose(
+                np.asarray(mixture_logprobs(logits, mode)), expect, atol=1e-6
+            )
+
+
+# ---------------------------------------------------------------------------
+# generate: EOS stop + masking (satellite)
+# ---------------------------------------------------------------------------
+
+
+class TestGenerateEOS:
+    def test_stops_early_and_masks(self):
+        model = stub_model()
+        params = {"scale": jnp.float32(10.0)}
+        # counter model: prompt ends at 3 -> emits 4, 5, 6(=eos), stop
+        batch = {"tokens": jnp.array([[1, 2, 3]], jnp.int32)}
+        toks = generate(STUB_CFG, model, params, batch, max_seq=16, num_tokens=8, eos_id=6)
+        assert toks.shape[1] == 3  # stopped well before the 8-token budget
+        np.testing.assert_array_equal(np.asarray(toks), [[4, 5, 6]])
+
+    def test_masks_mixed_rows(self):
+        model = stub_model()
+        params = {"scale": jnp.float32(10.0)}
+        # row0 hits eos=6 after 2 tokens; row1 only at the budget edge
+        batch = {"tokens": jnp.array([[3, 4], [0, 1]], jnp.int32)}
+        toks = np.asarray(
+            generate(STUB_CFG, model, params, batch, max_seq=16, num_tokens=5, eos_id=6, pad_id=9)
+        )
+        np.testing.assert_array_equal(toks[0], [5, 6, 9, 9, 9])
+        np.testing.assert_array_equal(toks[1], [2, 3, 4, 5, 6])
+
+    def test_no_eos_keeps_full_budget(self):
+        model = stub_model()
+        params = {"scale": jnp.float32(10.0)}
+        batch = {"tokens": jnp.array([[0]], jnp.int32)}
+        toks = generate(STUB_CFG, model, params, batch, max_seq=16, num_tokens=4)
+        assert toks.shape == (1, 4)
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+
+class TestServeEngine:
+    def test_engine_matches_sequential_reference(self):
+        """Staggered arrivals, slots recycled; every request's tokens AND
+        mixture log-prob rows must match running it alone through the
+        sequential per-member reference."""
+        cfg = tiny_cfg()
+        model = get_model(cfg)
+        k = 3
+        stack = member_stack(cfg, model, k)
+        engine = ServeEngine(
+            cfg, model, stack, num_slots=2, max_seq=24, record_logprobs=True
+        )
+        reqs = synthetic_trace(
+            5, vocab_size=cfg.vocab_size, prompt_lens=(5, 8), max_new=6,
+            mean_interarrival=2.0, seed=3,
+        )
+        report = engine.run(reqs)
+        assert len(report.results) == 5
+        assert report.pool["active"] == 0  # every slot recycled
+        for req in reqs:
+            res = next(r for r in report.results if r.rid == req.rid)
+            ref_toks, ref_lp = reference_bma_decode(
+                cfg, model, members_list(stack, k),
+                {"tokens": jnp.asarray(req.prompt)[None]}, 24, req.max_new,
+            )
+            assert res.num_tokens == req.max_new
+            np.testing.assert_array_equal(res.tokens, np.asarray(ref_toks)[0])
+            np.testing.assert_allclose(
+                res.logprobs, np.asarray(ref_lp)[:, 0], atol=1e-5
+            )
+
+    def test_single_decode_program(self):
+        """Mid-decode admissions + member swap + slot recycling never
+        retrace: exactly ONE compiled decode program for the whole trace."""
+        cfg = tiny_cfg()
+        model = get_model(cfg)
+        stack = member_stack(cfg, model, 2)
+        engine = ServeEngine(cfg, model, stack, num_slots=2, max_seq=24)
+        reqs = synthetic_trace(
+            6, vocab_size=cfg.vocab_size, prompt_lens=(5,), max_new=5,
+            mean_interarrival=1.5, seed=4,
+        )
+        report = engine.run(reqs)
+        assert report.decode_steps > 5  # genuinely interleaved, not one batch
+        assert report.trace_counts["decode"] == 1, report.trace_counts
+        assert engine.decode_trace_count == 1
+        # same engine, more load, a registry swap: still no retrace
+        engine.registry.propose(jax.tree.map(lambda x: x * 1.01, stack))
+        more = synthetic_trace(
+            3, vocab_size=cfg.vocab_size, prompt_lens=(5,), max_new=4,
+            mean_interarrival=1.0, seed=5,
+        )
+        engine.run(more)
+        assert engine.decode_trace_count == 1
+
+    def test_engine_eos_and_budget(self):
+        model = stub_model()
+        engine = ServeEngine(STUB_CFG, model, stub_members(2), num_slots=2,
+                             max_seq=32, eos_id=6)
+        reqs = [
+            Request(rid=0, prompt=np.array([2], np.int32), max_new=8),  # 3,4,5,6 -> eos
+            Request(rid=1, prompt=np.array([7], np.int32), max_new=3),  # 8,9,10: budget
+        ]
+        report = engine.run(reqs)
+        r0, r1 = report.results
+        assert r0.hit_eos and r0.num_tokens == 4
+        np.testing.assert_array_equal(r0.tokens, [3, 4, 5, 6])
+        assert not r1.hit_eos and r1.num_tokens == 3
+        np.testing.assert_array_equal(r1.tokens, [8, 9, 10])
+
+    def test_sampled_path_top_k_1_equals_greedy(self):
+        cfg = tiny_cfg()
+        model = get_model(cfg)
+        stack = member_stack(cfg, model, 2)
+        reqs = synthetic_trace(
+            3, vocab_size=cfg.vocab_size, prompt_lens=(6,), max_new=4,
+            mean_interarrival=1.0, seed=6,
+        )
+        greedy = ServeEngine(cfg, model, stack, num_slots=2, max_seq=16).run(reqs)
+        sampled = ServeEngine(
+            cfg, model, stack, num_slots=2, max_seq=16,
+            sampling=SamplingParams(temperature=2.0, top_k=1),
+        ).run(reqs)
+        for a, b in zip(greedy.results, sampled.results):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+
+    def test_sampled_path_deterministic_in_seed(self):
+        cfg = tiny_cfg()
+        model = get_model(cfg)
+        stack = member_stack(cfg, model, 2)
+        reqs = synthetic_trace(
+            4, vocab_size=cfg.vocab_size, prompt_lens=(5,), max_new=5,
+            mean_interarrival=2.0, seed=7,
+        )
+        mk = lambda: ServeEngine(
+            cfg, model, stack, num_slots=2, max_seq=16,
+            sampling=SamplingParams(temperature=0.9, top_k=8), seed=11,
+        ).run(reqs)
+        a, b = mk(), mk()
+        for ra, rb in zip(a.results, b.results):
+            np.testing.assert_array_equal(ra.tokens, rb.tokens)
+
+    def test_admission_refuses_cache_overflow(self):
+        model = stub_model()
+        engine = ServeEngine(STUB_CFG, model, stub_members(1), num_slots=1, max_seq=8)
+        bad = [Request(rid=0, prompt=np.arange(5, dtype=np.int32), max_new=4)]
+        with pytest.raises(ValueError, match="max_seq"):
+            engine.run(bad)
+
+    def test_max_steps_truncation_recycles_slots(self):
+        model = stub_model()
+        engine = ServeEngine(STUB_CFG, model, stub_members(1), num_slots=2, max_seq=64)
+        reqs = [
+            Request(rid=i, prompt=np.array([0], np.int32), max_new=30) for i in range(2)
+        ]
+        report = engine.run(reqs, max_steps=3)
+        assert report.pool["active"] == 0  # truncated slots recycled
+        assert all(r.truncated for r in report.results)
+        assert all(0 < r.num_tokens < 30 for r in report.results)
+        # engine still fully usable afterwards, and per-run decode_steps
+        # excludes the first run's ticks
+        rep2 = engine.run(
+            [Request(rid=9, prompt=np.array([0], np.int32), max_new=4)]
+        )
+        (r9,) = rep2.results
+        assert not r9.truncated and r9.num_tokens == 4
+        np.testing.assert_array_equal(r9.tokens, [1, 2, 3, 4])
+        assert rep2.decode_steps == 3  # admit emits 1, then 3 decode ticks
+
+    def test_queueing_when_oversubscribed(self):
+        model = stub_model()
+        engine = ServeEngine(STUB_CFG, model, stub_members(1), num_slots=1, max_seq=64)
+        reqs = [
+            Request(rid=i, prompt=np.array([0], np.int32), max_new=4, arrival_step=0)
+            for i in range(3)
+        ]
+        report = engine.run(reqs)
+        assert [r.rid for r in report.results] == [0, 1, 2]  # FCFS order
+        admits = sorted(r.admitted_step for r in report.results)
+        assert admits[0] < admits[1] < admits[2]  # strictly serialized on 1 slot
+        assert report.pool["high_water"] == 1
+
+
+# ---------------------------------------------------------------------------
+# ensemble diagnostics + snapshot registry (satellite)
+# ---------------------------------------------------------------------------
+
+
+class TestSyntheticTrace:
+    def test_sub_tick_interarrival_is_not_clamped(self):
+        """mean < 1 must genuinely raise the offered load (multiple
+        arrivals per tick), not silently degrade to one per tick."""
+        heavy = synthetic_trace(200, vocab_size=8, mean_interarrival=0.25, seed=0)
+        light = synthetic_trace(200, vocab_size=8, mean_interarrival=1.0, seed=0)
+        assert heavy[-1].arrival_step < light[-1].arrival_step / 2
+        span = heavy[-1].arrival_step
+        assert span == pytest.approx(200 * 0.25, rel=0.5)
+
+    def test_rejects_nonpositive_rate(self):
+        with pytest.raises(ValueError):
+            synthetic_trace(2, vocab_size=8, mean_interarrival=0.0)
+
+
+class TestRegistry:
+    def test_collapsed_ensemble_flagged(self):
+        p = init_params(get_model(tiny_cfg()).param_specs(tiny_cfg()), jax.random.PRNGKey(0))
+        collapsed = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (3,) + x.shape), p)
+        health = ensemble_diagnostics(collapsed)
+        assert health["collapsed"] and health["rel_spread"] < 1e-6
+
+    def test_registry_refuses_collapsed_keeps_serving_old(self):
+        cfg = tiny_cfg()
+        model = get_model(cfg)
+        stack = member_stack(cfg, model, 2)
+        reg = SnapshotRegistry(stack)
+        collapsed = jax.tree.map(lambda x: jnp.broadcast_to(x[:1], x.shape), stack)
+        assert not reg.propose(collapsed)
+        assert reg.version == 0 and reg.rejected == 1
+        # old members untouched
+        np.testing.assert_array_equal(
+            np.asarray(jax.tree.leaves(reg.members)[0]), np.asarray(jax.tree.leaves(stack)[0])
+        )
+        assert reg.propose(jax.tree.map(lambda x: x * 1.01, stack))
+        assert reg.version == 1
+
+    def test_registry_rejects_wrong_k(self):
+        stack = {"w": jnp.ones((3, 4))}
+        reg = SnapshotRegistry({"w": jnp.arange(8.0).reshape(2, 4)})
+        with pytest.raises(ValueError):
+            reg.propose(stack)
+
+    def test_validate_rejects_collapsed_initial(self):
+        with pytest.raises(ValueError):
+            SnapshotRegistry({"w": jnp.ones((3, 4))}, validate=True)
+
+    def test_live_refresh_through_engine(self):
+        """Background chain-stacked SGLD feeds the registry at chunk
+        boundaries while the engine serves; promotions happen and the
+        decode program still compiles exactly once."""
+        cfg = tiny_cfg()
+        model = get_model(cfg)
+        k = 2
+        stack = member_stack(cfg, model, k)
+        center = jax.tree.map(lambda x: x[0], stack)
+        grad_fn = lambda p: jax.tree.map(lambda x, c: 2500.0 * (x - c), p, center)
+        start = jax.tree.map(lambda x: jnp.broadcast_to(x[0][None], x.shape) + 0.0, stack)
+        reg = SnapshotRegistry(stack)
+        refresher = ChainRefresher(
+            reg, core.sgld(step_size=8e-5), grad_fn, start,
+            key=jax.random.PRNGKey(8), chunk_steps=8, total_steps=32,
+        )
+        engine = ServeEngine(
+            cfg, model, reg, num_slots=2, max_seq=16,
+            refresher=refresher, refresh_every=3,
+        )
+        reqs = synthetic_trace(
+            4, vocab_size=cfg.vocab_size, prompt_lens=(5,), max_new=6,
+            mean_interarrival=2.0, seed=9,
+        )
+        report = engine.run(reqs)
+        assert report.registry["version"] >= 1  # at least one promotion
+        assert report.refresher["refreshes"] >= 1
+        assert report.trace_counts["decode"] == 1  # swap is data, not shape
+        assert len(report.results) == 4
+
+    def test_refresher_exhausts(self):
+        grad_fn = lambda p: p
+        start = jnp.zeros((2, 3))
+        reg = SnapshotRegistry(start + jnp.arange(2.0)[:, None])
+        refr = ChainRefresher(
+            reg, core.sgld(step_size=0.1), grad_fn, start,
+            key=jax.random.PRNGKey(0), chunk_steps=4, total_steps=8,
+        )
+        assert refr.refresh()  # independent per-element noise => spread > 0
+        assert refr.refresh() and not refr.exhausted
+        assert not refr.refresh() and refr.exhausted  # total_steps consumed
+
+
+# ---------------------------------------------------------------------------
+# cache pool
+# ---------------------------------------------------------------------------
+
+
+class TestCachePool:
+    def _pool(self, compress):
+        cfg = tiny_cfg()
+        return CachePool(cfg, get_model(cfg), num_members=2, num_slots=3,
+                         max_seq=8, compress_parked=compress)
+
+    def _fill(self, pool, seed=0):
+        pool.caches = jax.tree.map(
+            lambda a: a
+            + jax.random.normal(jax.random.PRNGKey(seed), a.shape).astype(a.dtype)
+            if jnp.issubdtype(a.dtype, jnp.floating)
+            else a + 1,
+            pool.caches,
+        )
+
+    def test_acquire_release_recycle(self):
+        pool = self._pool(False)
+        a, b = pool.acquire(), pool.acquire()
+        assert a != b and pool.free_slots == 1
+        pool.release(a)
+        with pytest.raises(ValueError):
+            pool.release(a)  # double free
+        c = pool.acquire()
+        assert pool.stats()["high_water"] == 2
+        del b, c
+
+    def test_pool_exhaustion(self):
+        pool = self._pool(False)
+        for _ in range(3):
+            pool.acquire()
+        with pytest.raises(IndexError):
+            pool.acquire()
+
+    @pytest.mark.parametrize("compress", [False, True])
+    def test_park_restore_roundtrip(self, compress):
+        pool = self._pool(compress)
+        slot = pool.acquire()
+        self._fill(pool)
+        orig = jax.tree.map(lambda a: np.asarray(a[:, slot]), pool.caches)
+        parked = pool.park(slot)
+        assert pool.free_slots == 3  # park released the slot
+        assert parked.compressed == compress
+        slot2 = pool.restore(parked)
+        back = jax.tree.map(lambda a: np.asarray(a[:, slot2]), pool.caches)
+        for o, r in zip(jax.tree.leaves(orig), jax.tree.leaves(back)):
+            if np.issubdtype(o.dtype, np.floating):
+                tol = 0.05 if compress else 1e-7  # int8 block codec error
+                np.testing.assert_allclose(
+                    o.astype(np.float32), r.astype(np.float32), atol=tol
+                )
+            else:
+                np.testing.assert_array_equal(o, r)  # int leaves exact
+
+
+# ---------------------------------------------------------------------------
+# executor chunk-boundary snapshot stream (the registry's refresh hook)
+# ---------------------------------------------------------------------------
+
+
+class TestExecutorStream:
+    def _executor(self, chunk):
+        return ChainExecutor(
+            sampler=core.sgld(step_size=0.1),
+            grad_fn=lambda t, _b: t,
+            chunk_steps=chunk,
+            key_mode="fold",
+        )
+
+    def test_stream_matches_run(self):
+        p = jnp.ones((2, 3))
+        key = jax.random.PRNGKey(0)
+        ex1 = self._executor(8)
+        final_run = ex1.run(p + 0.0, ex1.sampler.init(p), num_steps=24, key=key)
+        ex2 = self._executor(8)
+        snaps = list(ex2.stream(p + 0.0, ex2.sampler.init(p), num_steps=24, key=key))
+        assert [s.step for s in snaps] == [8, 16, 24]
+        np.testing.assert_array_equal(
+            np.asarray(final_run.params), np.asarray(snaps[-1].params)
+        )
+
+    def test_snapshots_survive_donation(self):
+        p = jnp.zeros((2, 3))
+        ex = self._executor(4)
+        snaps = list(ex.stream(p, ex.sampler.init(p), num_steps=12, key=jax.random.PRNGKey(1)))
+        # every yielded copy is still readable after the full run consumed
+        # (and donated) the live carry
+        vals = [float(jnp.sum(s.params)) for s in snaps]
+        assert len(set(vals)) == 3
