@@ -28,6 +28,7 @@ BENCHES = {
     "overhead": "sampler_overhead",  # sampler hot-loop + executor + fused kernel
     "roofline": "roofline",  # deliverable (g), reads dry-run artifacts
     "serve": "serve_engine",  # continuous-batching BMA engine latency/throughput
+    "adaptive": "adaptive_tier",  # preconditioned vs plain ESS/sec + FeedbackESS demo
 }
 
 # historical artifact names (ISSUE 4): fig1_toy -> BENCH_fig1.json

@@ -33,6 +33,8 @@ if [[ "${SKIP_BENCH:-0}" != "1" ]]; then
   REPRO_BENCH_QUICK=1 python -m benchmarks.run --bench overhead
   echo "== bench smoke: serve engine (tiny model, few slots/tokens; writes BENCH_serve.json) =="
   REPRO_BENCH_QUICK=1 python -m benchmarks.run serve
+  echo "== bench smoke: adaptive tier (preconditioned vs plain ESS/sec; writes BENCH_adaptive.json) =="
+  REPRO_BENCH_QUICK=1 python -m benchmarks.run adaptive
 fi
 
 if [[ "${RUN_SLOW:-0}" == "1" ]]; then

@@ -11,7 +11,15 @@ from .tree_util import (
     tree_mean_axis0,
     tree_random_normal,
 )
-from .schedules import as_schedule, constant, cosine, polynomial_decay, warmup_cosine
+from .schedules import (
+    FeedbackESS,
+    as_schedule,
+    constant,
+    cosine,
+    feedback_ess,
+    polynomial_decay,
+    warmup_cosine,
+)
 from .sghmc import SGHMCState, sghmc
 from .sgld import SGLDState, sgld
 from .ec_sghmc import ECSGHMCState, ec_sghmc, resample_chain_from_center
@@ -19,8 +27,20 @@ from .ec_sgld import ECSGLDState, ec_sgld
 from .async_sghmc import AsyncSGHMCState, async_sghmc
 from .easgd import EAMSGDState, EASGDState, ECMSGDState, eamsgd, easgd, ec_msgd
 from .potential import Potential, chainwise, flat_prior, gaussian_prior, make_potential
-from .preconditioner import rmsprop_preconditioner
-from .scale_adapted import ScaleAdaptedState, scale_adapted_sghmc
+from .preconditioner import (
+    PrecondState,
+    adam_preconditioner,
+    frozen_mass_inv,
+    get_preconditioner,
+    rmsprop_preconditioner,
+)
+from .preconditioned_sgld import PSGLDState, preconditioned_sgld
+from .scale_adapted import (
+    ScaleAdaptedECState,
+    ScaleAdaptedState,
+    scale_adapted_ec_sghmc,
+    scale_adapted_sghmc,
+)
 from . import recipe
 
 __all__ = [
@@ -32,9 +52,11 @@ __all__ = [
     "tree_cast",
     "tree_mean_axis0",
     "tree_random_normal",
+    "FeedbackESS",
     "as_schedule",
     "constant",
     "cosine",
+    "feedback_ess",
     "polynomial_decay",
     "warmup_cosine",
     "SGHMCState",
@@ -59,8 +81,16 @@ __all__ = [
     "flat_prior",
     "gaussian_prior",
     "make_potential",
+    "PrecondState",
+    "adam_preconditioner",
+    "frozen_mass_inv",
+    "get_preconditioner",
     "rmsprop_preconditioner",
+    "PSGLDState",
+    "preconditioned_sgld",
+    "ScaleAdaptedECState",
     "ScaleAdaptedState",
+    "scale_adapted_ec_sghmc",
     "scale_adapted_sghmc",
     "recipe",
 ]

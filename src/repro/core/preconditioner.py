@@ -1,9 +1,23 @@
-"""Diagonal mass-matrix adaptation (RMSProp-style, à la scale-adapted SGHMC).
+"""Diagonal mass-matrix adaptation (RMSProp/Adam-style, à la scale-adapted
+SGHMC and pSGLD).
 
-Maintains m̂ = sqrt(E[g²]) per parameter and exposes M^{-1} as a pytree the
-samplers can consume in place of the scalar ``mass``.  Adaptation is frozen
-after ``burnin`` steps so the sampler targets a fixed (valid) Hamiltonian
-afterwards.
+Maintains a running second-moment estimate V̂ = E[g²] per parameter and
+exposes M⁻¹ = 1/(√V̂ + ε) as a pytree the samplers consume in place of the
+scalar ``mass``.  Adaptation is FROZEN after ``burnin`` steps so the sampler
+targets a fixed (valid) Hamiltonian afterwards: for every step ≥ burnin the
+returned M⁻¹ is bit-identical — the contract the frozen-preconditioner
+oracle (``repro.diagnostics.oracle``) and the stationary battery rely on.
+
+Both preconditioners share the ``(init, update)`` transform shape:
+
+    p_init, p_update = rmsprop_preconditioner(decay=0.99, burnin=1000)
+    pstate = p_init(params)
+    minv, pstate = p_update(pstate, grads)   # minv: pytree like params, > 0
+
+Identity preconditioning for equivalence tests: ``decay=1.0`` holds V̂ at
+its all-ones init and ``eps=0.0`` makes M⁻¹ exactly 1.0 — a sampler built
+that way must match its unpreconditioned twin bit-for-bit
+(``tests/test_adaptive_equivalence.py``).
 """
 from __future__ import annotations
 
@@ -12,13 +26,23 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from .types import Params
+
 
 class PrecondState(NamedTuple):
-    v: any  # running E[g^2]
-    step: jnp.ndarray
+    """Diagonal-preconditioner carry: ``v`` is the running E[g²] pytree
+    (same structure as params, f32 leaves); ``step`` the adaptation
+    counter that implements the burn-in freeze."""
+
+    v: Params  # running E[g²], pytree congruent with params
+    step: jnp.ndarray  # scalar i32
 
 
 def rmsprop_preconditioner(decay: float = 0.99, eps: float = 1e-8, burnin: int = 1000):
+    """M⁻¹ = 1/(√V̂ + ε) with V̂ an exponential moving average of g²
+    (Springenberg et al.'s scale-adapted choice).  ``decay=1.0`` freezes V̂
+    at the all-ones init (identity preconditioning when ``eps=0``)."""
+
     def init(params):
         return PrecondState(
             v=jax.tree.map(lambda p: jnp.ones_like(p, jnp.float32), params),
@@ -36,3 +60,52 @@ def rmsprop_preconditioner(decay: float = 0.99, eps: float = 1e-8, burnin: int =
         return minv, PrecondState(v=new_v, step=state.step + 1)
 
     return init, update
+
+
+def adam_preconditioner(beta2: float = 0.999, eps: float = 1e-8, burnin: int = 1000):
+    """Adam-style second-moment preconditioner with bias correction:
+
+        M⁻¹ = 1 / (√(V̂ / (1 − β₂^t)) + ε)
+
+    The correction counter saturates at ``burnin`` together with V̂, so the
+    post-freeze M⁻¹ is a constant function of the frozen state — bit-frozen
+    for all steps ≥ burnin like the RMSProp variant.  (No first moment: a
+    sampler wants a mass matrix, not a search direction.)"""
+
+    def init(params):
+        return PrecondState(
+            v=jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            step=jnp.zeros((), jnp.int32),
+        )
+
+    def update(state, grads):
+        adapt = (state.step < burnin).astype(jnp.float32)
+        new_v = jax.tree.map(
+            lambda v, g: v + adapt * (1 - beta2) * (jnp.square(g.astype(jnp.float32)) - v),
+            state.v,
+            grads,
+        )
+        # saturating step count: bias correction freezes with V̂
+        t_eff = jnp.minimum(state.step + 1, burnin).astype(jnp.float32)
+        correction = 1.0 - beta2**t_eff
+        minv = jax.tree.map(lambda v: 1.0 / (jnp.sqrt(v / correction) + eps), new_v)
+        return minv, PrecondState(v=new_v, step=state.step + 1)
+
+    return init, update
+
+
+def get_preconditioner(name: str, *, burnin: int, decay: float, eps: float):
+    """Resolve a preconditioner family by name ("rmsprop" | "adam").
+    ``decay`` maps to the EMA coefficient (β₂ for adam)."""
+    if name == "rmsprop":
+        return rmsprop_preconditioner(decay=decay, eps=eps, burnin=burnin)
+    if name == "adam":
+        return adam_preconditioner(beta2=decay, eps=eps, burnin=burnin)
+    raise ValueError(f"unknown preconditioner {name!r} (want 'rmsprop' or 'adam')")
+
+
+def frozen_mass_inv(pstate: PrecondState, *, eps: float = 1e-8):
+    """The M⁻¹ implied by a (frozen) RMSProp preconditioner state — what the
+    stationary battery feeds to the frozen-preconditioner oracle.  Must match
+    ``rmsprop_preconditioner``'s formula exactly."""
+    return jax.tree.map(lambda v: 1.0 / (jnp.sqrt(v) + eps), pstate.v)

@@ -1,12 +1,33 @@
 """Scale-adapted SGHMC (Springenberg et al., 2016 — BOHAMIANN; the same
-authors' practical variant): diagonal preconditioning from an online
-gradient-variance estimate, adapted during burn-in then frozen so the
-stationary distribution stays valid.
+authors' practical variant) and its elastically-coupled composition:
+diagonal preconditioning from an online gradient-variance estimate, adapted
+during burn-in then FROZEN so the stationary distribution stays valid.
 
-    M^-1_i ∝ 1 / sqrt(V̂_i),   V̂ = EMA[g²]
+    M⁻¹ = 1 / (√V̂ + ε),   V̂ = EMA[g²]
 
-Composes with elastic coupling: ``scale_adapted_ec_sghmc`` preconditions
-each chain's kinetic term while keeping the Eq. 6 coupling structure.
+With a frozen diagonal M the augmented Hamiltonian
+
+    H = Σᵢ [ U(θⁱ) + ½ pⁱᵀ Mᵢ⁻¹ pⁱ ] + (α/2) Σᵢ ‖θⁱ − c‖² + ½ rᵀ M_c⁻¹ r
+
+has the SAME θ-marginal for ANY fixed masses, so preconditioning the
+kinetic terms does not perturb the target — provided friction and noise
+satisfy fluctuation–dissipation for the chosen convention.  Both samplers
+here therefore keep the injected-noise covariance MASS-INDEPENDENT
+(2εV for "eq4", 2ε²(V+C) for "eq6" — exactly ``sghmc._noise_scale``),
+while friction damps at rate εVM⁻¹.  The coupling force −εα(θⁱ − c̃) is a
+potential-gradient force and is deliberately NOT M-scaled: that is the
+consistent composition that preserves the Eq. 5 joint target after the
+burn-in freeze (DESIGN.md §6).
+
+Post-freeze the recursion is linear on a Gaussian target, so the
+frozen-preconditioner oracle (``repro.diagnostics.oracle.preconditioned_*``)
+certifies both samplers exactly; the stationary battery
+(``tests/test_stationary.py``) is their acceptance gate.
+
+``scale_adapted_ec_sghmc`` preconditions each chain's kinetic term from the
+chain's OWN gradient stream (per-chain diagonal Mᵢ⁻¹) and gives the center
+the chain-mean mass M_c⁻¹ = meanᵢ Mᵢ⁻¹ — symmetric when the chains agree,
+exact in the oracle either way.
 """
 from __future__ import annotations
 
@@ -15,15 +36,16 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from .ec_sghmc import p_step
 from .preconditioner import PrecondState, rmsprop_preconditioner
 from .schedules import as_schedule
 from .sghmc import _noise_scale
-from .tree_util import tree_random_normal
-from .types import Sampler
+from .tree_util import count_params, global_norm, tree_mean_axis0, tree_random_normal
+from .types import Params, Sampler
 
 
 class ScaleAdaptedState(NamedTuple):
-    momentum: any
+    momentum: Params
     precond: PrecondState
     step: jnp.ndarray
 
@@ -34,11 +56,24 @@ def scale_adapted_sghmc(
     temperature: float = 1.0,
     burnin: int = 1000,
     decay: float = 0.99,
+    precond_eps: float = 1e-8,
     noise_convention: str = "eq4",
     state_dtype=jnp.float32,
 ) -> Sampler:
+    """Preconditioned SGHMC:
+
+        θ' = θ + ε M⁻¹ p
+        p' = p − ε g − ε V M⁻¹ p + N(0, 2εV·T)        ["eq4"]
+
+    Noise covariance is mass-independent (fluctuation–dissipation for
+    friction C = V given the εVM⁻¹ damping), so with M⁻¹ frozen the chain
+    targets exp(−U/T) exactly in the ε → 0 limit and the exact discrete-time
+    moments are ``diagnostics.oracle.preconditioned_sghmc_stationary`` —
+    per dimension, identical to plain SGHMC with mass 1/M⁻¹."""
     schedule = as_schedule(step_size)
-    p_init, p_update = rmsprop_preconditioner(decay=decay, burnin=burnin)
+    p_init, p_update = rmsprop_preconditioner(
+        decay=decay, eps=precond_eps, burnin=burnin
+    )
 
     def init(params):
         return ScaleAdaptedState(
@@ -60,14 +95,203 @@ def scale_adapted_sghmc(
         def mom(p, g, m, n):
             p32 = p.astype(jnp.float32)
             out = (
-                p32
+                (1.0 - eps * friction * m) * p32
                 - eps * g.astype(jnp.float32)
-                - eps * friction * m * p32
-                + sigma * jnp.sqrt(m) * n  # noise scaled to the preconditioner
+                + sigma * n  # mass-independent: fluctuation-dissipation
             )
             return out.astype(state_dtype)
 
         new_mom = jax.tree.map(mom, state.momentum, grads, minv, noise)
         return updates, ScaleAdaptedState(new_mom, new_precond, state.step + 1)
 
-    return Sampler(init, update)
+    def stats(state, params):
+        del params
+        return {"step": state.step, "momentum_norm": global_norm(state.momentum)}
+
+    return Sampler(init, update, stats=stats)
+
+
+class ScaleAdaptedECState(NamedTuple):
+    """EC-SGHMC carry + per-chain preconditioner.  Chain leaves carry the
+    leading (K, ...) axis; center leaves do not (same contract as
+    ``ECSGHMCState``)."""
+
+    momentum: Params  # pⁱ : (K, ...) per leaf
+    precond: PrecondState  # per-chain V̂ : (K, ...) per leaf
+    center: Params  # c : (...)
+    center_momentum: Params  # r : (...)
+    center_stale: Params  # c̃ : worker-side stale snapshot of c
+    mean_theta_stale: Params  # server-side stale meanᵢ θⁱ
+    step: jnp.ndarray
+
+
+def scale_adapted_ec_sghmc(
+    step_size,
+    alpha: float = 1.0,
+    friction: float = 1.0,  # V
+    center_friction: float = 1.0,  # C
+    sync_every: int = 1,  # s
+    temperature: float = 1.0,
+    burnin: int = 1000,
+    decay: float = 0.99,
+    precond_eps: float = 1e-8,
+    noise_convention: str = "eq6",
+    center_noise_in_p: bool = True,
+    fused: bool = False,
+    state_dtype=jnp.float32,
+) -> Sampler:
+    """Eq. 6 elastic coupling with per-chain diagonal preconditioning:
+
+        θⁱ' = θⁱ + ε Mᵢ⁻¹ pⁱ
+        c'  = c + ε M_c⁻¹ r,        M_c⁻¹ = meanᵢ Mᵢ⁻¹
+        pⁱ' = pⁱ − ε g − ε V Mᵢ⁻¹ pⁱ − ε α (θⁱ − c̃) + σ_p N(0, I)
+        r'  = r − ε C M_c⁻¹ r − ε α (c − m̃θ) + σ_r N(0, I)
+
+    with the s-periodic stale exchange of ``ec_sghmc`` verbatim and the
+    mass-independent noise scales of ``sghmc._noise_scale``.  The momentum
+    line reuses ``ec_sghmc.p_step`` with an ARRAY M⁻¹, so with identity
+    preconditioning (``decay=1.0, precond_eps=0.0``) the trajectory is
+    bit-for-bit plain ``ec_sghmc(mass=1.0)`` — pinned by
+    ``tests/test_adaptive_equivalence.py``.
+
+    ``fused=True`` dispatches the θ/p update through the preconditioned
+    Pallas kernel (``repro.kernels.ops.fused_precond_ec_update_tree``); the
+    preconditioner EMA itself stays in XLA (cheap, and it must see raw
+    gradients).  No ``chain_axis`` / shard_map support: the chain-mean
+    center mass M_c⁻¹ would be a per-step collective — the adaptive tier is
+    single-program for now (DESIGN.md §6)."""
+    schedule = as_schedule(step_size)
+    s = int(sync_every)
+    p_init, p_update = rmsprop_preconditioner(
+        decay=decay, eps=precond_eps, burnin=burnin
+    )
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, state_dtype)
+        center = tree_mean_axis0(jax.tree.map(lambda p: p.astype(state_dtype), params))
+        copy = lambda t: jax.tree.map(jnp.copy, t)  # donation-safe buffers
+        return ScaleAdaptedECState(
+            momentum=jax.tree.map(zeros, params),
+            precond=p_init(params),
+            center=center,
+            center_momentum=jax.tree.map(lambda c: jnp.zeros_like(c), center),
+            center_stale=copy(center),
+            mean_theta_stale=copy(center),
+            step=jnp.zeros((), jnp.int32),
+        )
+
+    def update(grads, state, params, rng):
+        eps = schedule(state.step)
+        minv, new_precond = p_update(state.precond, grads)
+        minv_c = tree_mean_axis0(minv)
+        sigma_p = temperature**0.5 * _noise_scale(
+            eps, friction, center_friction if center_noise_in_p else 0.0, noise_convention
+        )
+        sigma_r = temperature**0.5 * _noise_scale(eps, center_friction, 0.0, noise_convention)
+
+        # -- position updates (pre-update momenta; Eq. 6 lines 1-2) ---------
+        updates = jax.tree.map(
+            lambda p, m: eps * m * p.astype(jnp.float32), state.momentum, minv
+        )
+        new_center = jax.tree.map(
+            lambda c, r, mc: (
+                c.astype(jnp.float32) + eps * mc * r.astype(jnp.float32)
+            ).astype(state_dtype),
+            state.center,
+            state.center_momentum,
+            minv_c,
+        )
+
+        # -- momentum updates ----------------------------------------------
+        k_p, k_r = jax.random.split(rng)
+        noise_r = tree_random_normal(k_r, state.center_momentum, jnp.float32)
+
+        if fused:
+            from repro.kernels.ops import fused_precond_ec_update_tree
+
+            new_theta_f, new_momentum = fused_precond_ec_update_tree(
+                params, state.momentum, grads, state.center_stale, minv, k_p,
+                eps=eps, friction=friction, alpha=alpha,
+                sigma_p=sigma_p, stochastic_round=True,
+            )
+            del new_theta_f  # updates (above) already carry eps*Mᵢ⁻¹*p
+        else:
+            noise_p = tree_random_normal(k_p, state.momentum, jnp.float32)
+            new_momentum = jax.tree.map(
+                lambda p, g, th, ct, m, n: p_step(
+                    p, g, th, ct, n, eps=eps, friction=friction, minv=m,
+                    alpha=alpha, sigma_p=sigma_p, out_dtype=state_dtype,
+                ),
+                state.momentum, grads, params, state.center_stale, minv, noise_p,
+            )
+
+        def r_step(r, c, mth, mc, n):
+            r32 = r.astype(jnp.float32)
+            out = (
+                r32
+                - eps * center_friction * mc * r32
+                - eps * alpha * (c.astype(jnp.float32) - mth.astype(jnp.float32))
+                + sigma_r * n
+            )
+            return out.astype(state_dtype)
+
+        new_center_momentum = jax.tree.map(
+            r_step,
+            state.center_momentum,
+            state.center,
+            state.mean_theta_stale,
+            minv_c,
+            noise_r,
+        )
+
+        # -- s-periodic exchange (identical to ec_sghmc) --------------------
+        def do_sync(operand):
+            new_c, upd = operand
+            new_params = jax.tree.map(
+                lambda th, u: th.astype(jnp.float32) + u, params, upd
+            )
+            mean_theta = jax.tree.map(
+                lambda x: x.astype(state_dtype), tree_mean_axis0(new_params)
+            )
+            return new_c, mean_theta
+
+        def no_sync(operand):
+            del operand
+            return state.center_stale, state.mean_theta_stale
+
+        is_sync = (state.step + 1) % s == 0
+        new_center_stale, new_mean_theta_stale = jax.lax.cond(
+            is_sync, do_sync, no_sync, (new_center, updates)
+        )
+
+        return updates, ScaleAdaptedECState(
+            momentum=new_momentum,
+            precond=new_precond,
+            center=new_center,
+            center_momentum=new_center_momentum,
+            center_stale=new_center_stale,
+            mean_theta_stale=new_mean_theta_stale,
+            step=state.step + 1,
+        )
+
+    def stats(state, params):
+        diff = jax.tree.map(
+            lambda th, c: th.astype(jnp.float32) - c.astype(jnp.float32)[None],
+            params,
+            state.center,
+        )
+        n_elem = max(count_params(params), 1)
+        rms = global_norm(diff) / jnp.sqrt(jnp.float32(n_elem))
+        k = jax.tree.leaves(params)[0].shape[0]
+        minv_leaves = jax.tree.leaves(state.precond.v)
+        v_mean = sum(jnp.mean(v) for v in minv_leaves) / len(minv_leaves)
+        return {
+            "step": state.step,
+            "momentum_norm": global_norm(state.momentum),
+            "center_momentum_norm": global_norm(state.center_momentum),
+            "chain_center_rms": rms,
+            "coupling_energy": 0.5 * alpha * rms * rms * (n_elem / k),
+            "precond_v_mean": v_mean,  # adaptation health: plateaus at freeze
+        }
+
+    return Sampler(init, update, stats=stats)

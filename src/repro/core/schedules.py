@@ -1,6 +1,8 @@
 """Step-size schedules. A schedule is ``step -> epsilon`` (jnp scalar)."""
 from __future__ import annotations
 
+import math
+
 import jax.numpy as jnp
 
 
@@ -38,6 +40,68 @@ def warmup_cosine(peak: float, warmup_steps: int, total_steps: int, floor: float
         return jnp.where(t < warmup_steps, warm, cos)
 
     return fn
+
+
+class FeedbackESS:
+    """Feedback step-size controller driven by measured sampling efficiency
+    (pysgmcmc-style stateful schedule: callable like any schedule, plus an
+    ``update()`` hook the host calls between compiled chunks).
+
+    Control law (multiplicative integral control on the ESS *rate*):
+
+        err   = clip((target − ess_rate) / target, −1, 1)
+        ε  ←  clip(ε · exp(gain · err), lo·ε₀, hi·ε₀)
+
+    ESS per step below target ⇒ the chain mixes too slowly ⇒ GROW ε (more
+    distance per step); above target ⇒ ε can shrink back toward the
+    small-bias regime.  Updates stop for steps ≥ ``freeze_at`` so the chain
+    has a genuinely fixed step size during measurement windows — the same
+    freeze-then-measure contract as the preconditioner burn-in
+    (DESIGN.md §6); only post-freeze samples enter stationary gates.
+
+    As a *schedule* it returns the CURRENT ε for any step: inside a traced
+    program that value is baked at trace time, which is exactly the executor
+    contract — ``ChainExecutor`` passes ε through ``hyper`` instead and calls
+    ``update()`` at chunk boundaries (``run/executor.py: adapt hook``), so
+    the compiled chunk never retraces.
+    """
+
+    def __init__(self, init: float, target_ess_rate: float, gain: float = 0.5,
+                 bounds: tuple = (0.1, 10.0), freeze_at: int | None = None):
+        if not (init > 0.0 and target_ess_rate > 0.0 and gain >= 0.0):
+            raise ValueError("init/target must be > 0, gain >= 0")
+        self.eps0 = float(init)
+        self.value = float(init)
+        self.target = float(target_ess_rate)
+        self.gain = float(gain)
+        self.lo = float(bounds[0]) * self.eps0
+        self.hi = float(bounds[1]) * self.eps0
+        self.freeze_at = freeze_at
+        self.frozen = False
+
+    def __call__(self, step):
+        del step  # the current value IS the schedule; host advances it
+        return jnp.asarray(self.value, jnp.float32)
+
+    def update(self, ess_rate, step: int | None = None) -> float:
+        """Feed one ESS-per-step measurement; returns the (new) ε.  No-op
+        once frozen (``step >= freeze_at`` or ``freeze()`` called)."""
+        if self.frozen or (
+            self.freeze_at is not None and step is not None and step >= self.freeze_at
+        ):
+            self.frozen = True
+            return self.value
+        err = min(max((self.target - float(ess_rate)) / self.target, -1.0), 1.0)
+        self.value = min(max(self.value * math.exp(self.gain * err), self.lo), self.hi)
+        return self.value
+
+    def freeze(self):
+        self.frozen = True
+
+
+def feedback_ess(init: float, target_ess_rate: float, **kw) -> FeedbackESS:
+    """Factory mirroring the other schedule constructors."""
+    return FeedbackESS(init, target_ess_rate, **kw)
 
 
 def as_schedule(x):

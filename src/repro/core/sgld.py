@@ -21,7 +21,9 @@ class SGLDState(NamedTuple):
     step: jnp.ndarray
 
 
-def sgld(step_size, temperature: float = 1.0, preconditioner=None) -> Sampler:
+def sgld(step_size, temperature: float = 1.0) -> Sampler:
+    """Diagonal preconditioning lives in ``preconditioned_sgld`` — this is
+    the bare Welling–Teh update."""
     schedule = as_schedule(step_size)
 
     def init(params):

@@ -35,12 +35,16 @@ from .moments import (
     welford_var,
 )
 from .oracle import (
+    DiagGaussianOracle,
     GaussianOracle,
     async_sghmc_stationary,
     ec_sghmc_stationary,
     lyapunov_stationary,
     monte_carlo_tolerance,
     noise_sigmas,
+    preconditioned_ec_sghmc_stationary,
+    preconditioned_sghmc_stationary,
+    preconditioned_sgld_stationary,
     sghmc_stationary,
     sgld_stationary,
 )
@@ -74,12 +78,16 @@ __all__ = [
     "welford_merge",
     "welford_std",
     "welford_var",
+    "DiagGaussianOracle",
     "GaussianOracle",
     "async_sghmc_stationary",
     "ec_sghmc_stationary",
     "lyapunov_stationary",
     "monte_carlo_tolerance",
     "noise_sigmas",
+    "preconditioned_ec_sghmc_stationary",
+    "preconditioned_sghmc_stationary",
+    "preconditioned_sgld_stationary",
     "sghmc_stationary",
     "sgld_stationary",
     "chain_center_rms",

@@ -329,6 +329,282 @@ def sgld_stationary(
     )
 
 
+# --- frozen-preconditioner regime -------------------------------------------
+#
+# Once a diagonal preconditioner freezes (step ≥ burnin — the contract of
+# ``repro.core.preconditioner``), the adaptive samplers iterate LINEAR
+# recursions again: per scalar dimension d the frozen M⁻¹ entry m_d is just
+# a constant mass 1/m_d, so the same period-map/Lyapunov machinery certifies
+# the preconditioned update rules exactly.  Assumptions (DESIGN.md §6,
+# ROADMAP Testing & diagnostics):
+#   * M⁻¹ is bit-frozen for every post-burn-in step (no residual adaptation),
+#   * injected noise is MASS-INDEPENDENT (the fluctuation–dissipation pairing
+#     of ``scale_adapted_*``; σ_p/σ_r identical to the unpreconditioned
+#     samplers), and
+#   * the coupling force −εα(θ − c̃) is NOT M-scaled (potential-gradient
+#     placement), matching ``scale_adapted_ec_sghmc``.
+# Under these, `preconditioned_*_stationary(mass_inv=1)` must reproduce the
+# corresponding scalar oracle exactly — asserted by the battery.
+
+
+class DiagGaussianOracle(NamedTuple):
+    """Per-dimension stationary moments under a frozen diagonal M⁻¹ on a
+    diagonal Gaussian target N(μ, diag(λ)⁻¹).  Arrays are (D,)."""
+
+    theta_mean: np.ndarray
+    theta_var: np.ndarray  # chain-averaged Var θ_d
+    theta_cross_cov: np.ndarray  # Cov(θⁱ_d, θʲ_d), i ≠ j
+    center_var: np.ndarray
+    momentum_var: np.ndarray
+    spectral_radius: float  # max over dimensions
+    phase_theta_vars: np.ndarray  # (s, D)
+
+
+def _as_1d(x, d: int, name: str) -> np.ndarray:
+    out = np.broadcast_to(np.asarray(x, np.float64), (d,)).copy()
+    if not np.all(np.isfinite(out)):
+        raise ValueError(f"{name} must be finite, got {out}")
+    return out
+
+
+def preconditioned_sghmc_stationary(
+    *,
+    step_size: float,
+    mass_inv,
+    friction: float = 1.0,
+    temperature: float = 1.0,
+    noise_convention: str = "eq4",
+    precision=1.0,
+    mu=0.0,
+) -> DiagGaussianOracle:
+    """Exact stationary moments of ``core.scale_adapted_sghmc`` AFTER the
+    burn-in freeze, on N(μ, diag(λ)⁻¹): per dimension the frozen m_d is a
+    constant mass 1/m_d and the noise is mass-independent, so each dim is
+    exactly ``sghmc_stationary(mass=1/m_d, precision=λ_d)``."""
+    minv = np.atleast_1d(np.asarray(mass_inv, np.float64)).reshape(-1)
+    d = minv.size
+    lam = _as_1d(precision, d, "precision")
+    mus = _as_1d(mu, d, "mu")
+    if np.any(minv <= 0.0):
+        raise ValueError(f"mass_inv must be > 0, got {minv}")
+    per = [
+        sghmc_stationary(
+            step_size=step_size, friction=friction, mass=1.0 / m,
+            temperature=temperature, noise_convention=noise_convention,
+            precision=l, mu=u,
+        )
+        for m, l, u in zip(minv, lam, mus)
+    ]
+    return DiagGaussianOracle(
+        theta_mean=mus,
+        theta_var=np.array([o.theta_var for o in per]),
+        theta_cross_cov=np.zeros(d),
+        center_var=np.zeros(d),
+        momentum_var=np.array([o.momentum_var for o in per]),
+        spectral_radius=max(o.spectral_radius for o in per),
+        phase_theta_vars=np.array([[o.theta_var for o in per]]),
+    )
+
+
+def preconditioned_sgld_stationary(
+    *,
+    step_size: float,
+    mass_inv,
+    temperature: float = 1.0,
+    precision=1.0,
+    mu=0.0,
+) -> DiagGaussianOracle:
+    """Exact stationary variance of frozen ``core.preconditioned_sgld``:
+    per dimension θ' = (1 − ε m_d λ_d) θ + ε m_d λ_d μ + N(0, 2 ε T m_d) —
+    an AR(1) identical to ``sgld_stationary(step_size=ε·m_d)``."""
+    minv = np.atleast_1d(np.asarray(mass_inv, np.float64)).reshape(-1)
+    d = minv.size
+    lam = _as_1d(precision, d, "precision")
+    mus = _as_1d(mu, d, "mu")
+    if np.any(minv <= 0.0):
+        raise ValueError(f"mass_inv must be > 0, got {minv}")
+    per = [
+        sgld_stationary(step_size=float(step_size) * m, temperature=temperature,
+                        precision=l, mu=u)
+        for m, l, u in zip(minv, lam, mus)
+    ]
+    return DiagGaussianOracle(
+        theta_mean=mus,
+        theta_var=np.array([o.theta_var for o in per]),
+        theta_cross_cov=np.zeros(d),
+        center_var=np.zeros(d),
+        momentum_var=np.zeros(d),
+        spectral_radius=max(o.spectral_radius for o in per),
+        phase_theta_vars=np.array([[o.theta_var for o in per]]),
+    )
+
+
+def preconditioned_ec_sghmc_stationary(
+    *,
+    step_size: float,
+    alpha: float,
+    num_chains: int,
+    mass_inv,
+    center_mass_inv=None,
+    friction: float = 1.0,
+    center_friction: float = 1.0,
+    sync_every: int = 1,
+    temperature: float = 1.0,
+    noise_convention: str = "eq6",
+    center_noise_in_p: bool = True,
+    precision=1.0,
+    mu=0.0,
+) -> DiagGaussianOracle:
+    """Exact stationary moments of ``core.scale_adapted_ec_sghmc`` after the
+    freeze, on N(μ, diag(λ)⁻¹) with exact gradients.
+
+    ``mass_inv``: frozen per-chain diagonal M⁻¹ — shape (K,), (D,), or
+    (K, D).  ``center_mass_inv``: M_c⁻¹, default the chain mean (what the
+    sampler computes).  Per dimension the augmented recursion is the
+    2K+4 system of ``ec_sghmc_stationary`` with per-chain masses:
+
+        θⁱ' = θⁱ + ε mᵢ pⁱ                        c' = c + ε m_c r
+        pⁱ' = (1 − εVmᵢ) pⁱ − ε(λ+α)θⁱ + εα c̃ + σ_p w
+        r'  = (1 − εCm_c) r − εα c + εα m̃θ + σ_r w
+
+    with the identical s-periodic stale exchange and MASS-INDEPENDENT noise
+    scales — the coupling force is not M-scaled (see module comment)."""
+    eps, s, k = float(step_size), int(sync_every), int(num_chains)
+    minv = np.asarray(mass_inv, np.float64)
+    if minv.ndim == 0:
+        minv = np.full((k, 1), float(minv))
+    elif minv.ndim == 1:
+        # (K,) = per-chain scalar masses; a 1-D per-dim array of length != K
+        # is ambiguous — pass (1, D) explicitly for chain-shared dims.
+        if minv.size != k:
+            raise ValueError(
+                f"1-D mass_inv must have length num_chains={k}; "
+                f"got {minv.size} (pass shape (1, D) for chain-shared values)"
+            )
+        minv = minv.reshape(k, 1)
+    minv = np.broadcast_to(minv, (k, minv.shape[1]))
+    d = minv.shape[1]
+    lam = _as_1d(precision, d, "precision")
+    mus = _as_1d(mu, d, "mu")
+    if np.any(minv <= 0.0):
+        raise ValueError("mass_inv must be > 0")
+    if center_mass_inv is None:
+        mc = minv.mean(axis=0)
+    else:
+        mc = _as_1d(center_mass_inv, d, "center_mass_inv")
+    sigma_p, sigma_r = noise_sigmas(
+        eps, friction, center_friction, temperature, noise_convention, center_noise_in_p
+    )
+
+    if alpha == 0.0:
+        # decoupled: chain i of dim d is SGHMC with mass 1/m_{i,d} driven at
+        # the EC noise scale σ_p; report the chain average (what a pooled
+        # empirical variance estimates, since all chain means equal μ)
+        tv = np.zeros(d)
+        mv = np.zeros(d)
+        rad = 0.0
+        for j in range(d):
+            for i in range(k):
+                a = eps * minv[i, j]
+                A2 = np.array([[1.0, a], [-eps * lam[j], 1.0 - eps * friction * minv[i, j]]])
+                r2 = float(np.max(np.abs(np.linalg.eigvals(A2))))
+                if r2 >= 1.0 - 1e-9:
+                    raise ValueError(
+                        f"chain {i} dim {j} not contractive (spectral radius {r2:.6f})"
+                    )
+                sg = lyapunov_stationary(A2, np.diag([0.0, sigma_p**2]))
+                tv[j] += sg[0, 0] / k
+                mv[j] += sg[1, 1] / k
+                rad = max(rad, r2)
+        return DiagGaussianOracle(
+            theta_mean=mus,
+            theta_var=tv,
+            theta_cross_cov=np.zeros(d),
+            center_var=np.full(d, float("inf")),
+            momentum_var=mv,
+            spectral_radius=rad,
+            phase_theta_vars=np.broadcast_to(tv, (s, d)).copy(),
+        )
+
+    n = 2 * k + 4
+    i_c, i_r, i_cs, i_mt = 2 * k, 2 * k + 1, 2 * k + 2, 2 * k + 3
+    th = slice(0, k)
+    pp = slice(k, 2 * k)
+
+    tv = np.zeros(d)
+    xc = np.zeros(d)
+    cv = np.zeros(d)
+    mv = np.zeros(d)
+    ptv = np.zeros((s, d))
+    rad = 0.0
+    for j in range(d):
+        A = np.zeros((n, n))
+        for i in range(k):
+            a_i = eps * minv[i, j]
+            A[i, i] = 1.0
+            A[i, k + i] = a_i
+            A[k + i, i] = -eps * (lam[j] + alpha)
+            A[k + i, k + i] = 1.0 - eps * friction * minv[i, j]
+            A[k + i, i_cs] = eps * alpha
+        a_c = eps * mc[j]
+        A[i_c, i_c] = 1.0
+        A[i_c, i_r] = a_c
+        A[i_r, i_c] = -eps * alpha
+        A[i_r, i_r] = 1.0 - eps * center_friction * mc[j]
+        A[i_r, i_mt] = eps * alpha
+        A_base = A.copy()
+        A_base[i_cs, i_cs] = 1.0
+        A_base[i_mt, i_mt] = 1.0
+        A_sync = A.copy()
+        A_sync[i_cs, i_c] = 1.0
+        A_sync[i_cs, i_r] = a_c
+        for i in range(k):
+            A_sync[i_mt, i] = 1.0 / k
+            A_sync[i_mt, k + i] = eps * minv[i, j] / k
+
+        Q = np.zeros((n, n))
+        for i in range(k):
+            Q[k + i, k + i] = sigma_p**2
+        Q[i_r, i_r] = sigma_r**2
+
+        steps = [A_base] * (s - 1) + [A_sync]
+        M = np.eye(n)
+        Q_phi = np.zeros((n, n))
+        for A_j in reversed(steps):
+            Q_phi += M @ Q @ M.T
+            M = M @ A_j
+        r_j = float(np.max(np.abs(np.linalg.eigvals(M))))
+        if r_j >= 1.0 - 1e-9:
+            raise ValueError(
+                f"dim {j}: period map not contractive (spectral radius {r_j:.6f})"
+            )
+        rad = max(rad, r_j)
+        sigma0 = lyapunov_stationary(M, Q_phi)
+        phase_sigmas = [sigma0]
+        for A_j in steps[:-1]:
+            phase_sigmas.append(A_j @ phase_sigmas[-1] @ A_j.T + Q)
+
+        ptv[:, j] = [np.mean(np.diag(sg[th, th])) for sg in phase_sigmas]
+        tv[j] = ptv[:, j].mean()
+        if k > 1:
+            xc[j] = np.mean(
+                [(np.sum(sg[th, th]) - np.trace(sg[th, th])) / (k * (k - 1))
+                 for sg in phase_sigmas]
+            )
+        cv[j] = np.mean([sg[i_c, i_c] for sg in phase_sigmas])
+        mv[j] = np.mean([np.mean(np.diag(sg[pp, pp])) for sg in phase_sigmas])
+
+    return DiagGaussianOracle(
+        theta_mean=mus,
+        theta_var=tv,
+        theta_cross_cov=xc,
+        center_var=cv,
+        momentum_var=mv,
+        spectral_radius=rad,
+        phase_theta_vars=ptv,
+    )
+
+
 def monte_carlo_tolerance(var: float, ess: float, nsigma: float = 3.0) -> float:
     """Half-width of an nσ acceptance band for an empirical variance with
     ``ess`` effectively-independent Gaussian samples: SD(s²) ≈ var·√(2/ess).

@@ -151,3 +151,117 @@ def fused_ec_update_flat(
         ),
         interpret=interpret,
     )(scalars, theta, p, g, c_tilde, bits1, bits2)
+
+
+def _precond_kernel(
+    scal_ref,  # SMEM (4,): eps, ef (= eps*V), coupling (= eps*alpha), sigma_p
+    theta_ref,
+    p_ref,
+    g_ref,
+    c_ref,
+    minv_ref,  # per-element M^-1 block (frozen diagonal preconditioner)
+    bits1_ref,
+    bits2_ref,
+    theta_out_ref,
+    p_out_ref,
+    *,
+    stochastic_round: bool,
+    onchip_prng: bool,
+):
+    """Preconditioned Eq. 6 chain update — ``_kernel`` with the scalar
+    eps*M^-1 / decay pair replaced by a streamed diagonal M^-1:
+
+        theta' = theta + (eps*M^-1) * p
+        p'     = (1 - ef*M^-1)*p - eps*g - coupling*(theta - c̃) + sigma_p*n
+
+    Term grouping mirrors ``core.ec_sghmc.p_step`` with an ARRAY ``minv``
+    (ef*minv, then 1 - ·), so fused and unfused agree bit-for-bit in f32 —
+    pinned by tests/test_fused_equivalence.py.  One extra HBM read stream
+    (M^-1) vs. the plain kernel; still beats XLA's ~10 streams."""
+    eps = scal_ref[0]
+    ef = scal_ref[1]
+    coupling = scal_ref[2]
+    sigma_p = scal_ref[3]
+
+    theta = theta_ref[...].astype(jnp.float32)
+    p = p_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    c = c_ref[...].astype(jnp.float32)
+    minv = minv_ref[...].astype(jnp.float32)
+    if onchip_prng:  # TPU target: zero-HBM-traffic noise
+        pltpu.prng_seed(pl.program_id(0))
+        bits1 = pltpu.prng_random_bits(theta.shape).astype(jnp.uint32)
+        bits2 = pltpu.prng_random_bits(theta.shape).astype(jnp.uint32)
+    else:
+        bits1 = bits1_ref[...]
+        bits2 = bits2_ref[...]
+
+    noise = _box_muller(bits1, bits2)
+    theta_new = theta + eps * minv * p
+    p_new = (1.0 - ef * minv) * p - eps * g - coupling * (theta - c) + sigma_p * noise
+
+    if stochastic_round and theta_out_ref.dtype == jnp.bfloat16:
+        sr_bits = bits1 ^ bits2
+        theta_out_ref[...] = _stochastic_round_bf16(theta_new, sr_bits)
+        p_out_ref[...] = _stochastic_round_bf16(p_new, jnp.uint32(0x9E3779B9) ^ sr_bits)
+    else:
+        theta_out_ref[...] = theta_new.astype(theta_out_ref.dtype)
+        p_out_ref[...] = p_new.astype(p_out_ref.dtype)
+
+
+def fused_precond_ec_update_flat(
+    theta,
+    p,
+    g,
+    c_tilde,
+    minv,
+    bits1,
+    bits2,
+    *,
+    eps: float,
+    friction: float,
+    alpha: float,
+    sigma_p: float,
+    stochastic_round: bool = True,
+    onchip_prng: bool = False,
+    interpret: bool = True,
+):
+    """Preconditioned entry: operands (R, LANES)-shaped, R % BLOCK_ROWS == 0,
+    ``minv`` elementwise (the frozen diagonal M^-1).  Hyperparameters may be
+    traced (SMEM); the diagonal streams as a tensor block."""
+    R, L = theta.shape
+    assert L == LANES and R % BLOCK_ROWS == 0, (theta.shape,)
+    assert minv.shape == theta.shape, (minv.shape, theta.shape)
+    scalars = jnp.stack(
+        [
+            jnp.asarray(eps, jnp.float32),
+            jnp.asarray(eps * friction, jnp.float32),
+            jnp.asarray(eps * alpha, jnp.float32),
+            jnp.asarray(sigma_p, jnp.float32),
+        ]
+    )
+    grid = (R // BLOCK_ROWS,)
+    blk = lambda: pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0))
+    kernel = functools.partial(
+        _precond_kernel, stochastic_round=stochastic_round, onchip_prng=onchip_prng
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            blk(),
+            blk(),
+            blk(),
+            blk(),
+            blk(),
+            blk(),
+            blk(),
+        ],
+        out_specs=(blk(), blk()),
+        out_shape=(
+            jax.ShapeDtypeStruct(theta.shape, theta.dtype),
+            jax.ShapeDtypeStruct(p.shape, p.dtype),
+        ),
+        interpret=interpret,
+    )(scalars, theta, p, g, c_tilde, minv, bits1, bits2)

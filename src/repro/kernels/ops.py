@@ -79,6 +79,59 @@ def fused_ec_update_tree(params, momentum, grads, center_stale, key, **hyper):
     return new_t, new_p
 
 
+@functools.partial(jax.jit, static_argnames=("stochastic_round",))
+def fused_precond_ec_update(
+    theta, p, g, c_tilde, minv, key,
+    *, eps, friction, alpha, sigma_p, stochastic_round=True,
+):
+    """Single-leaf preconditioned fused Eq. 6 update: the scalar mass is
+    replaced by an elementwise (frozen) diagonal M^-1 streamed as a tensor.
+    Same noise/rounding conventions as ``fused_ec_update``."""
+    shape, dtype_t, dtype_p = theta.shape, theta.dtype, p.dtype
+    t2, n = _pad_flat(theta)
+    p2, _ = _pad_flat(p)
+    g2, _ = _pad_flat(g.astype(jnp.float32))
+    c2, _ = _pad_flat(jnp.broadcast_to(c_tilde, theta.shape))
+    m2, _ = _pad_flat(jnp.broadcast_to(minv, theta.shape).astype(jnp.float32))
+    onchip = _on_tpu()
+    if onchip:
+        bits1 = bits2 = jnp.zeros(t2.shape, jnp.uint32)  # unused on TPU
+    else:
+        k1, k2 = jax.random.split(key)
+        bits1 = jax.random.bits(k1, t2.shape, jnp.uint32)
+        bits2 = jax.random.bits(k2, t2.shape, jnp.uint32)
+    t_new, p_new = _fe.fused_precond_ec_update_flat(
+        t2, p2, g2, c2, m2, bits1, bits2,
+        eps=eps, friction=friction, alpha=alpha, sigma_p=sigma_p,
+        stochastic_round=stochastic_round, onchip_prng=onchip,
+        interpret=not onchip,
+    )
+    t_new = t_new.reshape(-1)[:n].reshape(shape).astype(dtype_t)
+    p_new = p_new.reshape(-1)[:n].reshape(shape).astype(dtype_p)
+    return t_new, p_new
+
+
+def fused_precond_ec_update_tree(params, momentum, grads, center_stale, minv, key, **hyper):
+    """Pytree-level preconditioned fused update.  Key-split structure is
+    identical to ``fused_ec_update_tree`` so the two dispatch paths see the
+    same per-leaf noise streams for a given ``key``."""
+    leaves_t, treedef = jax.tree.flatten(params)
+    leaves_p = treedef.flatten_up_to(momentum)
+    leaves_g = treedef.flatten_up_to(grads)
+    leaves_c = treedef.flatten_up_to(center_stale)
+    leaves_m = treedef.flatten_up_to(minv)
+    keys = jax.random.split(key, len(leaves_t))
+    outs = [
+        fused_precond_ec_update(t, p, g, c, m, k, **hyper)
+        for t, p, g, c, m, k in zip(
+            leaves_t, leaves_p, leaves_g, leaves_c, leaves_m, keys
+        )
+    ]
+    new_t = treedef.unflatten([o[0] for o in outs])
+    new_p = treedef.unflatten([o[1] for o in outs])
+    return new_t, new_p
+
+
 # --- flash attention ---------------------------------------------------------
 
 

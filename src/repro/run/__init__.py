@@ -1,4 +1,16 @@
 """Device-resident run executor (scan-fused sampling drivers)."""
-from .executor import ChainExecutor, ChunkSnapshot, RunResult, rollout
+from .executor import (
+    ChainExecutor,
+    ChunkSnapshot,
+    RunResult,
+    ess_feedback_adapter,
+    rollout,
+)
 
-__all__ = ["ChainExecutor", "ChunkSnapshot", "RunResult", "rollout"]
+__all__ = [
+    "ChainExecutor",
+    "ChunkSnapshot",
+    "RunResult",
+    "ess_feedback_adapter",
+    "rollout",
+]

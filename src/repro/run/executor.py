@@ -51,6 +51,7 @@ from repro.diagnostics import (
     BatchMeansState,
     MomentState,
     batch_ess_add,
+    batch_ess_estimate,
     batch_ess_init,
     welford_add,
     welford_init,
@@ -320,8 +321,9 @@ class ChainExecutor:
         keys=None,
         start_step: int = 0,
         hyper=None,
-        sweep: bool = False,
+        sweep: bool | None = None,
         on_chunk: Callable | None = None,
+        adapt_fn: Callable | None = None,
     ) -> RunResult:
         """Advance ``num_steps`` steps from ``(params, state)``.
 
@@ -330,14 +332,27 @@ class ChainExecutor:
         ``"fold"``/``"carry"``.  ``start_step``: absolute index of the first
         step (resume; drives ``fold_in``, ``batch_fn`` and schedules
         through the sampler's own step counter).  ``sweep``: vmap the run
-        over the leading axis of params/state/keys/hyper (implied by
-        ``hyper``).  ``on_chunk(step_end, params, state, outs)`` runs on the
-        host at every chunk boundary; return False to stop early.
+        over the leading axis of params/state/keys/hyper (default: implied
+        by ``hyper``; pass ``sweep=False`` to use an UNSWEPT hyper pytree —
+        the adaptation configuration).  ``on_chunk(step_end, params, state,
+        outs)`` runs on the host at every chunk boundary; return False to
+        stop early.
+
+        ``adapt_fn(step_end, carry, hyper) -> hyper | None`` is the
+        ADAPTATION HOOK: called on the host at every chunk boundary (before
+        the next chunk launches); a non-None return replaces ``hyper`` for
+        the remaining chunks.  Because hyper values enter the compiled chunk
+        as traced scalars, changing their VALUES never retraces — the hook
+        must preserve their avals (keep jnp.float32 scalars jnp.float32).
+        This is how ``schedules.FeedbackESS`` closes the diagnostics →
+        dynamics loop: read the in-carry streaming ESS, call
+        ``controller.update()``, and hand the new step size to the next
+        chunk (see ``ess_feedback_adapter``).
 
         The carry is DONATED between chunks: buffers passed in are consumed
         (pass copies if you need them after).
         """
-        sweep = sweep or hyper is not None
+        sweep = (hyper is not None) if sweep is None else bool(sweep)
         if self.sampler_factory is not None and hyper is None:
             raise ValueError("sampler_factory mode needs hyper=")
         if self.key_mode == "keys" and keys is None:
@@ -373,6 +388,10 @@ class ChainExecutor:
             if on_chunk is not None:
                 if on_chunk(t_abs, carry["params"], carry["state"], outs) is False:
                     stopped = True
+            if adapt_fn is not None and t_run < num_steps and not stopped:
+                new_hyper = adapt_fn(t_abs, carry, hyper)
+                if new_hyper is not None:
+                    hyper = new_hyper
         # dispatch is async: settle the final carry (same executable as the
         # chunk outputs) so wall_s measures compute, not enqueue latency
         jax.block_until_ready(carry["params"])
@@ -535,6 +554,34 @@ class ChainExecutor:
         carry = self._sharded_carry(params, state, 0)
         fn = self._build_sharded(num_steps, mesh, chain_axis, carry, num_chains, specs)
         return fn.lower(key, carry)
+
+
+def ess_feedback_adapter(controller, hyper_key: str = "step_size"):
+    """Bridge a ``schedules.FeedbackESS`` controller to the executor's
+    ``adapt_fn`` hook: at each chunk boundary, turn the in-carry batch-means
+    ESS into an ESS-per-step rate, feed it to ``controller.update``, and
+    hand the controller's new value back through ``hyper[hyper_key]``.
+
+    Requires the executor to be built with ``ess_probe_fn`` (the streaming
+    ESS accumulator must ride the carry) and the sampler to be built via
+    ``sampler_factory`` reading ``hyper[hyper_key]``.  The replacement value
+    is always a jnp.float32 scalar — same aval every chunk, so the compiled
+    scan NEVER retraces (pinned by tests/test_executor.py)."""
+
+    def adapt(step_end, carry, hyper):
+        es = carry.get("ess")
+        if es is None:
+            raise ValueError("ess_feedback_adapter requires an executor with ess_probe_fn")
+        count = float(np.asarray(es.count))
+        if count < 2.0 * float(np.asarray(es.batch_len)):
+            return None  # need >= 2 complete batches for a defensible estimate
+        ess = np.asarray(batch_ess_estimate(es))
+        controller.update(float(np.mean(ess)) / max(count, 1.0), step=step_end)
+        new_hyper = dict(hyper or {})
+        new_hyper[hyper_key] = jnp.asarray(controller.value, jnp.float32)
+        return new_hyper
+
+    return adapt
 
 
 def rollout(

@@ -1,0 +1,131 @@
+"""Satellite gate: identity preconditioning must be a NO-OP, bit-for-bit.
+
+``rmsprop_preconditioner(decay=1.0, eps=0.0)`` holds V̂ at its all-ones
+init and returns M⁻¹ exactly 1.0, and every adaptive sampler deliberately
+groups its arithmetic so that multiplying by that runtime-1.0 array
+reproduces the unpreconditioned sampler's float ops exactly (same RNG split
+structure, same term association — see ``core.scale_adapted`` /
+``core.preconditioned_sgld``).  Any drift in grouping, noise scaling, or
+key plumbing breaks exact equality here long before it would move a
+stationary moment.
+
+Also pins ``schedules.feedback_ess`` frozen against ``schedules.constant``:
+a frozen controller IS a constant schedule.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+
+MU, PREC = 0.7, jnp.array([3.0, 0.5])
+STEPS = 30
+IDENTITY = dict(decay=1.0, precond_eps=0.0, burnin=10)  # v ≡ 1, M⁻¹ ≡ 1.0
+
+
+def _grad(th):
+    return PREC * (th - MU)
+
+
+def _traj(sampler, shape=(4, 2), seed=0, grad=None):
+    """EAGER step loop (no scan/jit): inside one fused program XLA may
+    contract a*b+c into an FMA differently for the two graph shapes, which
+    breaks strict bitwise comparison for reasons that have nothing to do
+    with the samplers.  Op-by-op dispatch pins the actual term grouping."""
+    grad = grad or _grad
+    params = jax.random.normal(jax.random.PRNGKey(11), shape, jnp.float32)
+    state = sampler.init(params)
+    keys = jax.random.split(jax.random.PRNGKey(seed), STEPS)
+    out = []
+    for k in keys:
+        g = grad(params)
+        upd, state = sampler.update(g, state, params=params, rng=k)
+        params = core.apply_updates(params, upd)
+        out.append(np.asarray(params))
+    return np.stack(out)
+
+
+class TestIdentityPreconditioningBitExact:
+    def test_sa_ec_sghmc_equals_ec_sghmc(self):
+        """The tentpole pin: identity-preconditioned EC-SGHMC == plain
+        EC-SGHMC bit-for-bit across sync boundaries (s=4) at T=1."""
+        kw = dict(step_size=0.05, alpha=1.0, friction=1.0, center_friction=1.0,
+                  sync_every=4, noise_convention="eq6", center_noise_in_p=True)
+        t_pre = _traj(core.scale_adapted_ec_sghmc(**kw, **IDENTITY))
+        t_ref = _traj(core.ec_sghmc(mass=1.0, **kw))
+        np.testing.assert_array_equal(t_pre, t_ref)
+
+    def test_sa_ec_sghmc_equals_ec_sghmc_fused(self):
+        """Same pin through the fused kernels: the preconditioned Pallas
+        kernel with M⁻¹ ≡ 1 must match the plain kernel bit-for-bit (same
+        counter-bit noise streams — identical key-split structure in the
+        tree wrappers)."""
+        kw = dict(step_size=0.05, alpha=0.7, sync_every=2, fused=True)
+        iso = lambda th: 1.3 * (th - MU)
+        t_pre = _traj(core.scale_adapted_ec_sghmc(**kw, **IDENTITY), shape=(2, 128), grad=iso)
+        t_ref = _traj(core.ec_sghmc(mass=1.0, **kw), shape=(2, 128), grad=iso)
+        np.testing.assert_array_equal(t_pre, t_ref)
+
+    def test_sa_sghmc_equals_sghmc(self):
+        kw = dict(step_size=0.05, friction=1.5, noise_convention="eq4")
+        t_pre = _traj(core.scale_adapted_sghmc(**kw, **IDENTITY))
+        t_ref = _traj(core.sghmc(mass=1.0, **kw))
+        np.testing.assert_array_equal(t_pre, t_ref)
+
+    def test_psgld_equals_sgld(self):
+        kw = dict(step_size=0.05, temperature=0.8)
+        t_pre = _traj(core.preconditioned_sgld(**kw, **IDENTITY))
+        t_ref = _traj(core.sgld(**kw))
+        np.testing.assert_array_equal(t_pre, t_ref)
+
+    def test_identity_minv_is_exactly_one(self):
+        """The premise the pins rest on, stated directly."""
+        p_init, p_update = core.rmsprop_preconditioner(decay=1.0, eps=0.0, burnin=10)
+        st = p_init(jnp.zeros((3, 5)))
+        minv, st = p_update(st, jnp.full((3, 5), 7.3))
+        assert np.all(np.asarray(minv) == np.float32(1.0))
+        minv, _ = p_update(st, jnp.full((3, 5), -123.4))
+        assert np.all(np.asarray(minv) == np.float32(1.0))
+
+
+class TestFeedbackESSFrozenIsConstant:
+    def test_frozen_matches_constant_schedule(self):
+        fb = core.feedback_ess(3e-3, target_ess_rate=0.1, freeze_at=0)
+        fb.update(1e9, step=0)  # past freeze_at: freezes without moving
+        const = core.constant(3e-3)
+        for t in (0, 1, 17, 10_000):
+            step = jnp.asarray(t, jnp.int32)
+            np.testing.assert_array_equal(np.asarray(fb(step)), np.asarray(const(step)))
+
+    def test_frozen_update_is_noop(self):
+        fb = core.feedback_ess(1e-2, target_ess_rate=0.5)
+        fb.freeze()
+        before = fb.value
+        for rate in (0.0, 0.25, 5.0):
+            assert fb.update(rate) == before
+        assert fb.value == before
+
+    def test_unfrozen_update_moves_toward_target(self):
+        fb = core.feedback_ess(1e-2, target_ess_rate=0.5, gain=0.5)
+        v0 = fb.value
+        fb.update(0.05)  # mixing too slow -> grow eps
+        assert fb.value > v0
+        v1 = fb.value
+        fb.update(5.0)  # mixing plenty -> shrink back
+        assert fb.value < v1
+
+    def test_bounds_respected(self):
+        fb = core.feedback_ess(1e-2, target_ess_rate=0.5, gain=10.0, bounds=(0.5, 2.0))
+        for _ in range(50):
+            fb.update(0.0)
+        assert fb.value == pytest.approx(2e-2)
+        for _ in range(50):
+            fb.update(100.0)
+        assert fb.value == pytest.approx(5e-3)
+
+    def test_as_schedule_accepts_controller(self):
+        """FeedbackESS satisfies the schedule protocol: ``as_schedule`` must
+        pass it through untouched (idempotence on callables)."""
+        fb = core.feedback_ess(2e-3, target_ess_rate=0.1)
+        assert core.as_schedule(fb) is fb

@@ -30,7 +30,7 @@ import pytest
 
 from repro import core
 from repro import diagnostics as diag
-from repro.run import ChainExecutor, rollout
+from repro.run import ChainExecutor, ess_feedback_adapter, rollout
 
 MU = jnp.array([2.0, -1.0])
 STEPS = 96
@@ -290,6 +290,122 @@ class TestSweep:
                 np.asarray(res.trace)[i], np.asarray(member.trace),
                 rtol=0, atol=1e-6,
             )
+
+
+class TestAdaptationHook:
+    """ISSUE-6: host-side adaptation at chunk boundaries (the FeedbackESS
+    loop).  The hook must (a) never retrace the compiled chunk when only
+    hyper VALUES change, (b) be bit-invisible when it is a no-op, and
+    (c) actually close the diagnostics → dynamics loop."""
+
+    def test_value_updates_do_not_retrace(self):
+        """The compile-count pin: sampler_factory runs at TRACE time only,
+        so its invocation count equals the number of chunk programs built —
+        exactly one here, no matter how often adapt_fn swaps the step size."""
+        calls = []
+
+        def factory(h):
+            calls.append(1)
+            return core.sgld(step_size=h["eps"])
+
+        keys = jax.random.split(jax.random.PRNGKey(40), STEPS)
+        ex = ChainExecutor(sampler_factory=factory, grad_fn=lambda t, _b: grad_U(t),
+                           trace_fn=lambda p: p, chunk_steps=16, key_mode="keys")
+        boundaries = []
+
+        def adapt(step_end, carry, h):
+            boundaries.append(step_end)
+            # new VALUE, same aval (jnp.float32 scalar) -> must not retrace
+            return {"eps": jnp.asarray(1e-2 / (1.0 + len(boundaries)), jnp.float32)}
+
+        p0 = start()
+        st0 = core.sgld(step_size=1e-2).init(p0)
+        hyper = {"eps": jnp.asarray(1e-2, jnp.float32)}
+        res = ex.run(p0, st0, num_steps=STEPS, keys=keys, hyper=hyper,
+                     sweep=False, adapt_fn=adapt)
+        assert res.steps == STEPS
+        assert len(calls) == 1, f"chunk retraced: factory ran {len(calls)}x"
+        # hook fires at every boundary except the final one
+        assert boundaries == list(range(16, STEPS, 16))
+
+    def test_noop_adapter_bit_identical_chunked_vs_unchunked(self):
+        """A constant schedule through the hook is invisible: chunked run
+        with an adapter that re-submits the same value == one unchunked run
+        with no adapter, bit-for-bit."""
+        keys = jax.random.split(jax.random.PRNGKey(41), STEPS)
+
+        def factory(h):
+            return core.ec_sghmc(step_size=h["eps"], alpha=1.0, sync_every=4,
+                                 friction=1.0, center_friction=1.0,
+                                 noise_convention="eq6")
+
+        outs = []
+        for chunk, adapt in ((STEPS, None),
+                             (16, lambda s, c, h: {"eps": jnp.asarray(h["eps"])})):
+            ex = ChainExecutor(sampler_factory=factory,
+                               grad_fn=lambda t, _b: grad_U(t),
+                               trace_fn=lambda p: p, chunk_steps=chunk,
+                               key_mode="keys")
+            p0 = start()
+            st0 = factory({"eps": jnp.asarray(1e-2, jnp.float32)}).init(p0)
+            res = ex.run(p0, st0, num_steps=STEPS, keys=keys,
+                         hyper={"eps": jnp.asarray(1e-2, jnp.float32)},
+                         sweep=False, adapt_fn=adapt)
+            outs.append(np.asarray(res.trace))
+        np.testing.assert_array_equal(outs[0], outs[1])
+
+    def test_adapted_value_reaches_the_dynamics(self):
+        """Zeroing the step size at the first boundary must freeze the SGLD
+        chain for every later chunk — proof the replacement value feeds the
+        traced program, not a stale closure."""
+        keys = jax.random.split(jax.random.PRNGKey(42), STEPS)
+        ex = ChainExecutor(sampler_factory=lambda h: core.sgld(step_size=h["eps"]),
+                           grad_fn=lambda t, _b: grad_U(t),
+                           trace_fn=lambda p: p, chunk_steps=16, key_mode="keys")
+        p0 = start()
+        st0 = core.sgld(step_size=1e-2).init(p0)
+        res = ex.run(p0, st0, num_steps=STEPS, keys=keys,
+                     hyper={"eps": jnp.asarray(1e-2, jnp.float32)}, sweep=False,
+                     adapt_fn=lambda s, c, h: {"eps": jnp.asarray(0.0, jnp.float32)})
+        traj = np.asarray(res.trace)
+        assert not np.array_equal(traj[0], traj[15])  # moved while eps > 0
+        np.testing.assert_array_equal(traj[16:], np.broadcast_to(traj[16], traj[16:].shape))
+
+    def test_ess_feedback_adapter_closes_the_loop(self):
+        """End-to-end FeedbackESS: in-carry streaming ESS -> controller
+        update -> new step size in the next chunk's hyper."""
+        controller = core.feedback_ess(1e-2, target_ess_rate=0.9, gain=0.5)
+        ex = ChainExecutor(
+            sampler_factory=lambda h: core.sghmc(step_size=h["step_size"], friction=1.0),
+            grad_fn=lambda t, _b: grad_U(t), chunk_steps=256, key_mode="keys",
+            ess_probe_fn=lambda p: p[0], ess_batch_len=32,
+        )
+        n = 1024
+        keys = jax.random.split(jax.random.PRNGKey(43), n)
+        p0 = start()
+        st0 = core.sghmc(step_size=1e-2, friction=1.0).init(p0)
+        res = ex.run(p0, st0, num_steps=n, keys=keys,
+                     hyper={"step_size": jnp.asarray(controller.eps0, jnp.float32)},
+                     sweep=False, adapt_fn=ess_feedback_adapter(controller))
+        assert res.steps == n
+        # an ESS rate of 0.9/step is unattainable -> the controller must
+        # have grown eps, within bounds
+        assert controller.value > controller.eps0
+        assert controller.lo <= controller.value <= controller.hi
+
+    def test_adapter_requires_ess_probe(self):
+        ex = ChainExecutor(
+            sampler_factory=lambda h: core.sghmc(step_size=h["step_size"], friction=1.0),
+            grad_fn=lambda t, _b: grad_U(t), chunk_steps=16, key_mode="keys",
+        )
+        keys = jax.random.split(jax.random.PRNGKey(44), STEPS)
+        p0 = start()
+        st0 = core.sghmc(step_size=1e-2, friction=1.0).init(p0)
+        controller = core.feedback_ess(1e-2, target_ess_rate=0.5)
+        with pytest.raises(ValueError, match="ess_probe_fn"):
+            ex.run(p0, st0, num_steps=STEPS, keys=keys,
+                   hyper={"step_size": jnp.asarray(1e-2, jnp.float32)}, sweep=False,
+                   adapt_fn=ess_feedback_adapter(controller))
 
 
 _SHARDED_SCRIPT = textwrap.dedent("""

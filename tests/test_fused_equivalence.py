@@ -13,7 +13,7 @@ import pytest
 
 from repro.core.ec_sghmc import p_step
 from repro.kernels import ref
-from repro.kernels.fused_ecsghmc import fused_ec_update_flat
+from repro.kernels.fused_ecsghmc import fused_ec_update_flat, fused_precond_ec_update_flat
 
 SHAPE = (8, 1024)  # one kernel block
 
@@ -65,6 +65,50 @@ def test_fused_matches_p_step_bitwise(seed, hyper):
 
     t_f, p_f = fused(theta, p, g, c, bits1, bits2)
     t_u, p_u = unfused(theta, p, g, c, bits1, bits2)
+    np.testing.assert_array_equal(np.asarray(t_f), np.asarray(t_u),
+                                  err_msg="theta' not bit-identical")
+    np.testing.assert_array_equal(np.asarray(p_f), np.asarray(p_u),
+                                  err_msg="p' not bit-identical")
+
+
+@pytest.mark.parametrize("seed", [0, 42])
+@pytest.mark.parametrize(
+    "hyper",
+    [
+        dict(eps=1e-2, friction=1.0, alpha=0.7, sigma_p=0.05),
+        dict(eps=0.1, friction=1.5, alpha=1.0, sigma_p=0.2),
+    ],
+    ids=["paper", "heavy"],
+)
+def test_fused_precond_matches_p_step_bitwise(seed, hyper):
+    """Preconditioned variant of the pin above: the M⁻¹-streaming kernel
+    must match ``p_step`` with an *array* minv bit-for-bit, including the
+    preconditioned drift theta' = theta + ε·M⁻¹·p."""
+    theta, p, g, c, bits1, bits2 = _operands(seed)
+    km = jax.random.PRNGKey(seed + 1000)
+    # strictly positive, well away from 1.0 so the multiply is non-trivial
+    minv = jnp.exp(0.5 * jax.random.normal(km, SHAPE, jnp.float32))
+
+    @jax.jit
+    def fused(theta, p, g, c, minv, bits1, bits2):
+        return fused_precond_ec_update_flat(
+            theta, p, g, c, minv, bits1, bits2,
+            stochastic_round=False, onchip_prng=False, interpret=True, **hyper,
+        )
+
+    @jax.jit
+    def unfused(theta, p, g, c, minv, bits1, bits2):
+        noise = ref.box_muller(bits1, bits2)
+        p_new = p_step(
+            p, g, theta, c, noise,
+            eps=hyper["eps"], friction=hyper["friction"], minv=minv,
+            alpha=hyper["alpha"], sigma_p=hyper["sigma_p"],
+        )
+        theta_new = theta + hyper["eps"] * minv * p
+        return theta_new, p_new
+
+    t_f, p_f = fused(theta, p, g, c, minv, bits1, bits2)
+    t_u, p_u = unfused(theta, p, g, c, minv, bits1, bits2)
     np.testing.assert_array_equal(np.asarray(t_f), np.asarray(t_u),
                                   err_msg="theta' not bit-identical")
     np.testing.assert_array_equal(np.asarray(p_f), np.asarray(p_u),

@@ -1,0 +1,177 @@
+"""Property suite for ``core.schedules`` and ``core.preconditioner``.
+
+Hypothesis-driven where available (``tests/util.import_hypothesis`` supplies
+no-op stubs otherwise), with deterministic fallbacks so a bare environment
+still exercises every contract:
+
+- Welling–Teh schedules: strictly positive and non-increasing for
+  γ ∈ (0.5, 1] over any step range.
+- ``as_schedule``: idempotent on callables, exact (bit-level f32) on floats.
+- Preconditioners: M⁻¹ strictly positive for arbitrary gradients, and
+  BIT-FROZEN for every step ≥ burnin — the invariant the frozen-
+  preconditioner oracle (``repro.diagnostics.oracle``) rests on.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro.core import schedules
+
+from util import import_hypothesis
+
+given, settings, st = import_hypothesis()
+
+
+def _steps(lo=0, hi=5000, n=64):
+    return jnp.linspace(lo, hi, n).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+
+class TestPolynomialDecay:
+    @given(
+        a=st.floats(1e-5, 10.0, allow_nan=False, allow_infinity=False),
+        b=st.floats(1.0, 100.0, allow_nan=False, allow_infinity=False),
+        gamma=st.floats(0.5, 1.0, exclude_min=True, allow_nan=False),
+    )
+    @settings(max_examples=50, deadline=None)
+    def test_positive_and_nonincreasing(self, a, b, gamma):
+        sched = schedules.polynomial_decay(a, b, gamma)
+        eps = np.asarray(jax.vmap(sched)(_steps()))
+        assert np.all(eps > 0.0)
+        assert np.all(np.diff(eps) <= 0.0)
+
+    def test_positive_and_nonincreasing_deterministic(self):
+        for gamma in (0.51, 0.75, 1.0):
+            sched = schedules.polynomial_decay(1e-2, 10.0, gamma)
+            eps = np.asarray(jax.vmap(sched)(_steps()))
+            assert np.all(eps > 0.0)
+            assert np.all(np.diff(eps) <= 0.0)
+
+    def test_matches_closed_form(self):
+        sched = schedules.polynomial_decay(0.5, 4.0, 0.75)
+        t = jnp.asarray(100, jnp.int32)
+        np.testing.assert_allclose(
+            np.asarray(sched(t)), 0.5 * (4.0 + 100.0) ** (-0.75), rtol=1e-6
+        )
+
+
+class TestAsSchedule:
+    def test_idempotent_on_callables(self):
+        for f in (
+            schedules.constant(1e-3),
+            schedules.polynomial_decay(1e-2, 10.0, 0.75),
+            schedules.feedback_ess(1e-3, target_ess_rate=0.1),
+        ):
+            assert schedules.as_schedule(f) is f
+
+    @given(x=st.floats(1e-8, 1e3, allow_nan=False, allow_infinity=False))
+    @settings(max_examples=50, deadline=None)
+    def test_exact_on_floats(self, x):
+        sched = schedules.as_schedule(x)
+        got = np.asarray(sched(jnp.asarray(7, jnp.int32)))
+        assert got == np.float32(x)
+
+    def test_exact_on_floats_deterministic(self):
+        for x in (3e-4, 1.0, 123.456):
+            got = np.asarray(schedules.as_schedule(x)(jnp.asarray(0, jnp.int32)))
+            assert got == np.float32(x)
+
+
+# ---------------------------------------------------------------------------
+# preconditioners
+# ---------------------------------------------------------------------------
+
+FAMILIES = ["rmsprop", "adam"]
+
+
+def _factory(name, *, burnin=8, decay=0.9, eps=1e-8):
+    return core.get_preconditioner(name, burnin=burnin, decay=decay, eps=eps)
+
+
+def _grad_stream(shape, n, seed=0, scale=1.0):
+    keys = jax.random.split(jax.random.PRNGKey(seed), n)
+    return [scale * jax.random.normal(k, shape, jnp.float32) for k in keys]
+
+
+class TestPreconditionerPositivity:
+    @pytest.mark.parametrize("name", FAMILIES)
+    def test_minv_strictly_positive(self, name):
+        p_init, p_update = _factory(name)
+        state = p_init(jnp.zeros((4, 3)))
+        for g in _grad_stream((4, 3), 20, seed=1, scale=10.0):
+            minv, state = p_update(state, g)
+            m = np.asarray(minv)
+            assert np.all(np.isfinite(m))
+            assert np.all(m > 0.0)
+
+    @pytest.mark.parametrize("name", FAMILIES)
+    def test_minv_positive_for_zero_grads(self, name):
+        """eps keeps M⁻¹ finite even when V̂ collapses to ~0 (adam inits at
+        zero; zero gradients never grow it)."""
+        p_init, p_update = _factory(name)
+        state = p_init(jnp.zeros(5))
+        for _ in range(3):
+            minv, state = p_update(state, jnp.zeros(5))
+        m = np.asarray(minv)
+        assert np.all(np.isfinite(m)) and np.all(m > 0.0)
+
+    @given(scale=st.floats(1e-3, 1e3, allow_nan=False, allow_infinity=False))
+    @settings(max_examples=25, deadline=None)
+    def test_minv_positive_across_grad_scales(self, scale):
+        for name in FAMILIES:
+            p_init, p_update = _factory(name)
+            state = p_init(jnp.zeros(7))
+            for g in _grad_stream((7,), 5, seed=3, scale=scale):
+                minv, state = p_update(state, g)
+                assert np.all(np.asarray(minv) > 0.0)
+
+
+class TestPreconditionerFreeze:
+    @pytest.mark.parametrize("name", FAMILIES)
+    def test_minv_bit_frozen_after_burnin(self, name):
+        """For every step ≥ burnin the returned M⁻¹ must be BIT-identical no
+        matter what gradients arrive — the frozen-preconditioner oracle
+        contract (DESIGN.md §6)."""
+        burnin = 6
+        p_init, p_update = _factory(name, burnin=burnin)
+        state = p_init(jnp.zeros((2, 4)))
+        grads = _grad_stream((2, 4), burnin + 10, seed=5, scale=3.0)
+        frozen = None
+        for t, g in enumerate(grads):
+            minv, state = p_update(state, g)
+            if t == burnin:
+                frozen = np.asarray(minv)
+                frozen_v = np.asarray(state.v)
+            elif t > burnin:
+                np.testing.assert_array_equal(np.asarray(minv), frozen)
+                np.testing.assert_array_equal(np.asarray(state.v), frozen_v)
+
+    @pytest.mark.parametrize("name", FAMILIES)
+    def test_adapts_before_burnin(self, name):
+        """The freeze test is vacuous unless V̂ actually moves pre-burnin."""
+        p_init, p_update = _factory(name, burnin=100)
+        state = p_init(jnp.zeros(3))
+        v0 = np.asarray(state.v)
+        _, state = p_update(state, jnp.full(3, 2.0))
+        assert not np.array_equal(np.asarray(state.v), v0)
+
+    def test_frozen_mass_inv_matches_update_output(self):
+        """``frozen_mass_inv`` must reproduce the rmsprop formula exactly —
+        it is how the battery feeds the oracle."""
+        p_init, p_update = _factory("rmsprop", burnin=4, eps=1e-8)
+        state = p_init(jnp.zeros(6))
+        for g in _grad_stream((6,), 8, seed=7):
+            minv, state = p_update(state, g)
+        np.testing.assert_array_equal(
+            np.asarray(core.frozen_mass_inv(state, eps=1e-8)), np.asarray(minv)
+        )
+
+    def test_unknown_family_raises(self):
+        with pytest.raises(ValueError, match="unknown preconditioner"):
+            core.get_preconditioner("nesterov", burnin=1, decay=0.9, eps=1e-8)

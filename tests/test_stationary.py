@@ -274,6 +274,264 @@ class TestFusedECSGHMCStationary:
         assert_matches_oracle(traj, oracle, label="ec-fused-a0-s1")
 
 
+# ---------------------------------------------------------------------------
+# Adaptive tier (ROADMAP item 4): post-burn-in battery against the
+# frozen-preconditioner oracle.  Diagonal target so the frozen M⁻¹ is
+# materially non-uniform; the oracle consumes the ACTUAL frozen M⁻¹ read
+# back from the final sampler state (recover it by running one preconditioner
+# update on the frozen state — a no-op that returns the exact frozen value),
+# so there is no modeling of what adaptation "should" converge to.
+# ---------------------------------------------------------------------------
+
+PREC_DIAG = np.array([4.0, 0.25])  # per-dim precisions; cond(Σ) = 16
+SA_BURNIN = 2_000
+# eq4 noise keeps stationary θ-var ≈ T/λ, so V̂ ≈ λ and M⁻¹ ≈ λ^(-1/2):
+# frozen masses differ 2.8× across dims — a real preconditioning test
+SA_EC_KW = dict(friction=1.0, center_friction=1.0, noise_convention="eq4",
+                center_noise_in_p=False)
+
+
+def run_chains_prec(sampler, shape, steps, burn, seed=0, prec=PREC_DIAG):
+    """``run_chains`` on the diagonal target N(MU, diag(prec)⁻¹); also
+    returns the final sampler state so tests can read the frozen
+    preconditioner."""
+    params0 = jnp.full(shape, MU + 1.0, jnp.float32)
+    keys = jax.random.split(jax.random.PRNGKey(seed), steps)
+    p = jnp.asarray(prec, jnp.float32)
+    res = rollout(
+        sampler, lambda th: p * (th - MU), params0,
+        num_steps=steps, keys=keys, moments=False, chunk_steps=8192,
+    )
+    traj = np.asarray(res.trace)[burn:]
+    traj = traj[None] if traj.ndim == 2 else np.moveaxis(traj, 1, 0)
+    return traj, res.state
+
+
+def frozen_minv_of(precond_state, p_update):
+    """The frozen M⁻¹ a post-burn-in step actually used: one more
+    preconditioner update on the frozen state changes nothing (adapt
+    gate is closed) and returns exactly the frozen M⁻¹ — family-agnostic,
+    no duplicated formula in the tests."""
+    assert int(np.asarray(precond_state.step)) >= SA_BURNIN
+    zeros = jax.tree.map(jnp.zeros_like, precond_state.v)
+    minv, after = p_update(precond_state, zeros)
+    np.testing.assert_array_equal(np.asarray(after.v), np.asarray(precond_state.v))
+    return np.asarray(minv, np.float64)
+
+
+def assert_matches_elementwise(traj, oracle, *, label=""):
+    """Per-(chain, dim) gate for INDEPENDENT scalar recursions with
+    distinct frozen masses — pooling across chains would blur genuinely
+    different stationary variances.  3σ Monte-Carlo bands per series."""
+    k, t, d = traj.shape
+    want_var = np.asarray(oracle.theta_var).reshape(k, d)
+    want_mean = np.asarray(oracle.theta_mean).reshape(k, d)
+    for i in range(k):
+        for j in range(d):
+            x = traj[i, :, j]
+            ess = diag.effective_sample_size(x)
+            emp_var = float(x.var())
+            vtol = diag.monte_carlo_tolerance(want_var[i, j], ess) + 1e-6
+            assert abs(emp_var - want_var[i, j]) < vtol, (
+                f"{label}[{i},{j}]: var {emp_var:.6f} vs oracle "
+                f"{want_var[i, j]:.6f} (tol {vtol:.6f}, ess {ess:.0f})"
+            )
+            mtol = 3.0 * np.sqrt(want_var[i, j] / max(ess, 4.0)) + 1e-4
+            assert abs(float(x.mean()) - want_mean[i, j]) < mtol, (
+                f"{label}[{i},{j}]: mean {x.mean():.5f} vs {want_mean[i, j]} "
+                f"(tol {mtol:.5f})"
+            )
+    rhat = float(np.max([diag.split_rhat(traj[i, :, j]) for i in range(k) for j in range(d)]))
+    assert rhat < 1.05, f"{label}: split-Rhat {rhat:.3f}"
+
+
+def assert_matches_diag_oracle(traj, oracle, *, check_cross=False, label=""):
+    """Per-dim gate for the COUPLED adaptive sampler: oracle moments are
+    chain-averaged per dimension (chains carry different frozen masses);
+    the pooled empirical variance estimates exactly that average since all
+    chain means equal μ.  Conservative coupled-chain ESS per dim."""
+    k, t, d = traj.shape
+    ess_nd = np.maximum(np.asarray(diag.coupled_ess_nd(traj)), 4.0)
+    for j in range(d):
+        x = traj[:, :, j]
+        want_var = float(oracle.theta_var[j])
+        emp_var = float(((x - x.mean()) ** 2).mean())
+        vtol = diag.monte_carlo_tolerance(want_var, ess_nd[j]) + 1e-6
+        assert abs(emp_var - want_var) < vtol, (
+            f"{label}[dim{j}]: var {emp_var:.6f} vs oracle {want_var:.6f} "
+            f"(tol {vtol:.6f}, ess {ess_nd[j]:.0f})"
+        )
+        mtol = 3.0 * np.sqrt(want_var / ess_nd[j]) + 1e-4
+        assert abs(float(x.mean()) - float(oracle.theta_mean[j])) < mtol, (
+            f"{label}[dim{j}]: mean {x.mean():.5f} vs {oracle.theta_mean[j]}"
+        )
+        if check_cross and k > 1:
+            mu_j = float(oracle.theta_mean[j])
+            pairs = [
+                np.mean((x[i] - mu_j) * (x[l] - mu_j))
+                for i in range(k) for l in range(i + 1, k)
+            ]
+            emp_cross = float(np.mean(pairs))
+            want_cross = float(oracle.theta_cross_cov[j])
+            ctol = 3.0 * np.sqrt(
+                (want_var**2 + want_cross**2) / ess_nd[j]
+            ) + 1e-6
+            assert abs(emp_cross - want_cross) < ctol, (
+                f"{label}[dim{j}]: cross {emp_cross:.6f} vs {want_cross:.6f} "
+                f"(tol {ctol:.6f})"
+            )
+    rhat = float(np.max(diag.split_rhat_nd(traj)))
+    assert rhat < 1.05, f"{label}: split-Rhat {rhat:.3f}"
+
+
+class TestScaleAdaptedSGHMCStationary:
+    """Satellite: oracle-gate the EXISTING scale-adapted sampler (it only
+    had smoke tests).  Each (chain, dim) element is an independent SGHMC
+    recursion with the frozen mass 1/m_e — certified exactly."""
+
+    def test_frozen_oracle_elementwise(self):
+        eps = 0.1
+        s = core.scale_adapted_sghmc(step_size=eps, friction=1.0,
+                                     burnin=SA_BURNIN, decay=0.99)
+        traj, st = run_chains_prec(s, (4, D), steps=30_000, burn=4_000, seed=21)
+        _, p_up = core.rmsprop_preconditioner(decay=0.99, eps=1e-8, burnin=SA_BURNIN)
+        minv = frozen_minv_of(st.precond, p_up)  # (4, D)
+        # adaptation did something: the stiff dim must get the smaller mass
+        assert np.all(minv[:, 0] < 0.8 * minv[:, 1]), minv
+        oracle = diag.preconditioned_sghmc_stationary(
+            step_size=eps, mass_inv=minv.reshape(-1), friction=1.0,
+            noise_convention="eq4",
+            precision=np.broadcast_to(PREC_DIAG, (4, D)).reshape(-1), mu=MU,
+        )
+        assert_matches_elementwise(traj, oracle, label="sa-sghmc")
+
+    def test_uniform_mass_reduces_to_plain_oracle(self):
+        """Oracle self-consistency: M⁻¹ ≡ 1 must reproduce the scalar
+        SGHMC oracle bit-for-bit (same Lyapunov solve)."""
+        o = diag.preconditioned_sghmc_stationary(
+            step_size=0.1, mass_inv=np.ones(3), friction=1.0, precision=LAM, mu=MU
+        )
+        s = diag.sghmc_stationary(step_size=0.1, friction=1.0, precision=LAM, mu=MU)
+        np.testing.assert_array_equal(o.theta_var, np.full(3, s.theta_var))
+        np.testing.assert_array_equal(o.momentum_var, np.full(3, s.momentum_var))
+
+
+class TestPreconditionedSGLDStationary:
+    def test_frozen_oracle_elementwise(self):
+        eps = 0.05
+        s = core.preconditioned_sgld(step_size=eps, burnin=SA_BURNIN, decay=0.99)
+        traj, st = run_chains_prec(s, (4, D), steps=30_000, burn=4_000, seed=23)
+        _, p_up = core.rmsprop_preconditioner(decay=0.99, eps=1e-8, burnin=SA_BURNIN)
+        minv = frozen_minv_of(st.precond, p_up)
+        assert np.all(minv[:, 0] < 0.8 * minv[:, 1]), minv
+        oracle = diag.preconditioned_sgld_stationary(
+            step_size=eps, mass_inv=minv.reshape(-1),
+            precision=np.broadcast_to(PREC_DIAG, (4, D)).reshape(-1), mu=MU,
+        )
+        assert_matches_elementwise(traj, oracle, label="psgld")
+
+    @pytest.mark.slow
+    def test_adam_preconditioner_frozen_oracle(self):
+        """Same gate through the Adam family (bias-corrected second moment;
+        the correction counter saturates with the freeze)."""
+        eps = 0.05
+        s = core.preconditioned_sgld(step_size=eps, burnin=SA_BURNIN,
+                                     decay=0.999, precond="adam")
+        traj, st = run_chains_prec(s, (4, D), steps=34_000, burn=6_000, seed=29)
+        _, p_up = core.adam_preconditioner(beta2=0.999, eps=1e-8, burnin=SA_BURNIN)
+        minv = frozen_minv_of(st.precond, p_up)
+        oracle = diag.preconditioned_sgld_stationary(
+            step_size=eps, mass_inv=minv.reshape(-1),
+            precision=np.broadcast_to(PREC_DIAG, (4, D)).reshape(-1), mu=MU,
+        )
+        assert_matches_elementwise(traj, oracle, label="psgld-adam")
+
+    def test_identity_reduces_to_plain_oracle(self):
+        o = diag.preconditioned_sgld_stationary(
+            step_size=0.1, mass_inv=np.ones(2), precision=LAM, mu=MU
+        )
+        s = diag.sgld_stationary(step_size=0.1, precision=LAM, mu=MU)
+        np.testing.assert_array_equal(o.theta_var, np.full(2, s.theta_var))
+
+
+def _sa_ec_case(alpha, s, *, fused=False, steps=30_000, seed=None):
+    eps = 0.1
+    sampler = core.scale_adapted_ec_sghmc(
+        step_size=eps, alpha=alpha, sync_every=s, fused=fused,
+        burnin=SA_BURNIN, decay=0.99, **SA_EC_KW,
+    )
+    seed = seed if seed is not None else int(31 + 17 * alpha + s + 100 * fused)
+    traj, st = run_chains_prec(sampler, (K, D), steps=steps, burn=4_000, seed=seed)
+    _, p_up = core.rmsprop_preconditioner(decay=0.99, eps=1e-8, burnin=SA_BURNIN)
+    minv = frozen_minv_of(st.precond, p_up)  # (K, D)
+    oracle = diag.preconditioned_ec_sghmc_stationary(
+        step_size=eps, alpha=alpha, num_chains=K, mass_inv=minv,
+        sync_every=s, precision=PREC_DIAG, mu=MU, **SA_EC_KW,
+    )
+    return traj, oracle
+
+
+class TestScaleAdaptedECSGHMCStationary:
+    """The tentpole gate: preconditioned elastic coupling, post-freeze,
+    certified by the per-chain-mass period-map oracle at 3σ — α ∈ {0, 1},
+    s ∈ {1, 4, 8}, fused and unfused."""
+
+    @pytest.mark.parametrize("s", [1, 8])
+    def test_alpha0_is_independent_preconditioned_sghmc(self, s):
+        traj, oracle = _sa_ec_case(0.0, s)
+        # α=0 oracle must equal the decoupled preconditioned-SGHMC average
+        assert np.all(np.isfinite(oracle.theta_var))
+        assert_matches_diag_oracle(traj, oracle, label=f"sa-ec-a0-s{s}")
+
+    @pytest.mark.parametrize("s", [1, 8])
+    def test_alpha1(self, s):
+        traj, oracle = _sa_ec_case(1.0, s)
+        assert_matches_diag_oracle(traj, oracle, check_cross=True,
+                                   label=f"sa-ec-a1-s{s}")
+
+    @pytest.mark.slow
+    def test_alpha1_s4(self):
+        traj, oracle = _sa_ec_case(1.0, 4)
+        assert_matches_diag_oracle(traj, oracle, check_cross=True, label="sa-ec-a1-s4")
+
+    @pytest.mark.slow
+    def test_alpha0_s4(self):
+        traj, oracle = _sa_ec_case(0.0, 4)
+        assert_matches_diag_oracle(traj, oracle, label="sa-ec-a0-s4")
+
+    def test_alpha1_s1_fused(self):
+        """Same dynamics through the preconditioned Pallas kernel
+        (interpret mode on CPU, Box-Muller counter noise)."""
+        traj, oracle = _sa_ec_case(1.0, 1, fused=True)
+        assert_matches_diag_oracle(traj, oracle, check_cross=True,
+                                   label="sa-ec-fused-a1-s1")
+
+    @pytest.mark.slow
+    def test_alpha1_s8_fused(self):
+        traj, oracle = _sa_ec_case(1.0, 8, fused=True)
+        assert_matches_diag_oracle(traj, oracle, check_cross=True,
+                                   label="sa-ec-fused-a1-s8")
+
+    def test_uniform_mass_reduces_to_ec_oracle(self):
+        """Oracle self-consistency: uniform M⁻¹ = 1 must reproduce the
+        existing EC-SGHMC oracle across the acceptance grid."""
+        for alpha in (0.0, 1.0):
+            for s in (1, 4, 8):
+                kw = dict(step_size=0.1, alpha=alpha, num_chains=K,
+                          sync_every=s, precision=LAM, mu=MU, **SA_EC_KW)
+                o_pre = diag.preconditioned_ec_sghmc_stationary(
+                    mass_inv=np.ones(K), **kw
+                )
+                o_ref = diag.ec_sghmc_stationary(mass=1.0, **kw)
+                np.testing.assert_allclose(
+                    o_pre.theta_var, np.full(1, o_ref.theta_var), rtol=1e-12
+                )
+                np.testing.assert_allclose(
+                    o_pre.theta_cross_cov, np.full(1, o_ref.theta_cross_cov),
+                    rtol=1e-9, atol=1e-15,
+                )
+
+
 class TestResampleChainFromCenter:
     """Satellite: the elastic-K chain-recovery path draws from the
     stationary conditional theta^i | c ~ N(c, (K/alpha) I)."""
