@@ -29,6 +29,7 @@ BENCHES = {
     "roofline": "roofline",  # deliverable (g), reads dry-run artifacts
     "serve": "serve_engine",  # continuous-batching BMA engine latency/throughput
     "adaptive": "adaptive_tier",  # preconditioned vs plain ESS/sec + FeedbackESS demo
+    "shard": "shard_sweep",  # multi-device scale-out: steps/s + sync wire-bytes
 }
 
 # historical artifact names (ISSUE 4): fig1_toy -> BENCH_fig1.json

@@ -28,6 +28,11 @@ fi
 echo "== tier-1 (fast: -m 'not slow') =="
 python -m pytest -x -q -m "not slow" "$@"
 
+echo "== multidevice lane (forced 8-CPU-device child pytest, -m multidevice) =="
+REPRO_MULTIDEVICE_CHILD=1 JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}" \
+  XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=8" \
+  python -m pytest -x -q -m multidevice
+
 if [[ "${SKIP_BENCH:-0}" != "1" ]]; then
   echo "== bench smoke: overhead (writes BENCH_overhead.json) =="
   REPRO_BENCH_QUICK=1 python -m benchmarks.run --bench overhead
@@ -35,6 +40,8 @@ if [[ "${SKIP_BENCH:-0}" != "1" ]]; then
   REPRO_BENCH_QUICK=1 python -m benchmarks.run serve
   echo "== bench smoke: adaptive tier (preconditioned vs plain ESS/sec; writes BENCH_adaptive.json) =="
   REPRO_BENCH_QUICK=1 python -m benchmarks.run adaptive
+  echo "== bench smoke: shard sweep (forced 1/2/4/8-device children; writes BENCH_shard.json) =="
+  REPRO_BENCH_QUICK=1 python -m benchmarks.run shard
 fi
 
 if [[ "${RUN_SLOW:-0}" == "1" ]]; then

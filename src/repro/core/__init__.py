@@ -10,6 +10,7 @@ from .tree_util import (
     tree_cast,
     tree_mean_axis0,
     tree_random_normal,
+    tree_random_normal_per_chain,
 )
 from .schedules import (
     FeedbackESS,
@@ -52,6 +53,7 @@ __all__ = [
     "tree_cast",
     "tree_mean_axis0",
     "tree_random_normal",
+    "tree_random_normal_per_chain",
     "FeedbackESS",
     "as_schedule",
     "constant",

@@ -41,7 +41,13 @@ import jax.numpy as jnp
 
 from .schedules import as_schedule
 from .sghmc import _noise_scale
-from .tree_util import count_params, global_norm, tree_mean_axis0, tree_random_normal
+from .tree_util import (
+    count_params,
+    global_norm,
+    tree_mean_axis0,
+    tree_random_normal,
+    tree_random_normal_per_chain,
+)
 from .types import Sampler
 
 
@@ -89,6 +95,7 @@ def ec_sghmc(
     fused: bool = False,
     state_dtype=jnp.float32,
     chain_axis: str | None = None,
+    per_chain_noise: bool | None = None,
 ) -> Sampler:
     """``center_noise_in_p``: Eq. 6 as printed injects N(0, 2eps^2 (V+C))
     into p — the C part being the paper's *model* of center-staleness noise.
@@ -98,13 +105,32 @@ def ec_sghmc(
     when the staleness noise is real).  Faithful-to-paper default: True.
 
     ``chain_axis``: mesh axis name the leading chain axis is sharded over
-    when the update runs inside ``shard_map`` (DESIGN.md §2).  The s-periodic
-    chain mean then pmean-reduces over that axis — still the program's only
-    cross-chain collective.  None (default) keeps the single-program SPMD
-    emulation where the mean is a plain axis-0 reduction."""
+    when the update runs inside ``shard_map`` (DESIGN.md §2/§7).  The
+    s-periodic chain mean then reduces over that axis — still the program's
+    only cross-chain collective: a pmean, or, with ``compression``, a
+    single packed-int8 ``all_gather`` (~4x fewer wire bytes;
+    ``distributed.compression.compressed_tree_mean``).  None (default)
+    keeps the single-program SPMD emulation where the mean is a plain
+    axis-0 reduction (``compression`` then quantizes the reduced mean —
+    same noise model, no wire savings).
+
+    ``per_chain_noise``: draw each chain's momentum noise from
+    ``fold_in(step_key, global_chain_index)`` instead of one block draw
+    per shard.  The stream then depends only on the global chain index, so
+    any mesh layout of the same K chains — including the unsharded
+    single-device program — sees bit-identical per-chain noise
+    (the equivalence contract of DESIGN.md §7, gated by
+    tests/test_sharding.py).  Defaults to True under ``chain_axis`` for
+    the unfused path; the fused Pallas kernel generates block noise from
+    counter bits and keeps the legacy per-shard stream."""
     schedule = as_schedule(step_size)
     minv = 1.0 / mass
     s = int(sync_every)
+    if per_chain_noise is None:
+        per_chain_noise = chain_axis is not None and not fused
+    if per_chain_noise and fused:
+        raise ValueError("per_chain_noise requires the unfused update "
+                         "(the fused kernel draws block noise from counter bits)")
 
     def init(params):
         zeros = lambda p: jnp.zeros_like(p, state_dtype)
@@ -138,13 +164,13 @@ def ec_sghmc(
         )
 
         # -- momentum updates ----------------------------------------------
+        # shard_map: the caller passes a SHARD-INVARIANT key (DESIGN.md §2).
+        # Per-chain noise must differ across shards — per_chain_noise folds
+        # the GLOBAL chain index, the legacy block path folds the shard
+        # index — while the center noise k_r stays identical everywhere, or
+        # the replicated center state would silently random-walk apart.
         k_p, k_r = jax.random.split(rng)
-        if chain_axis is not None:
-            # shard_map: the caller passes a SHARD-INVARIANT key (DESIGN.md
-            # §2).  Per-chain noise must differ across shards — fold the
-            # shard index into k_p only — while the center noise k_r stays
-            # identical everywhere, or the replicated center state would
-            # silently random-walk apart per shard.
+        if chain_axis is not None and not per_chain_noise:
             k_p = jax.random.fold_in(k_p, jax.lax.axis_index(chain_axis))
         noise_r = tree_random_normal(k_r, state.center_momentum, jnp.float32)
 
@@ -161,7 +187,18 @@ def ec_sghmc(
             )
             del new_theta_f  # updates (above) already carry eps*M^-1*p
         else:
-            noise_p = tree_random_normal(k_p, state.momentum, jnp.float32)
+            if per_chain_noise:
+                local_k = jax.tree.leaves(state.momentum)[0].shape[0]
+                offset = (
+                    jax.lax.axis_index(chain_axis) * local_k
+                    if chain_axis is not None
+                    else 0
+                )
+                noise_p = tree_random_normal_per_chain(
+                    k_p, state.momentum, offset, jnp.float32
+                )
+            else:
+                noise_p = tree_random_normal(k_p, state.momentum, jnp.float32)
             new_momentum = jax.tree.map(
                 lambda p, g, th, ct, n: p_step(
                     p, g, th, ct, n, eps=eps, friction=friction, minv=minv,
@@ -191,11 +228,21 @@ def ec_sghmc(
             new_params = jax.tree.map(
                 lambda th, u: th.astype(jnp.float32) + u, params, upd
             )
-            mean_theta = tree_mean_axis0(new_params, chain_axis)  # <- pmean over chain axis
-            if compression is not None:
-                mean_theta = jax.tree.map(
-                    lambda x: compression.decode(compression.encode(x)), mean_theta
-                )
+            if compression is not None and chain_axis is not None:
+                # real wire compression: local mean -> packed int8 ->
+                # ONE all_gather over the chain axis -> decode + average
+                # (the program's only collective; ~4x fewer wire bytes)
+                from repro.distributed.compression import compressed_tree_mean
+
+                mean_theta = compressed_tree_mean(new_params, chain_axis)
+            else:
+                mean_theta = tree_mean_axis0(new_params, chain_axis)
+                if compression is not None:
+                    # single-program path: quantize the reduced mean —
+                    # models the wire noise without moving fewer bytes
+                    mean_theta = jax.tree.map(
+                        lambda x: compression.decode(compression.encode(x)), mean_theta
+                    )
             mean_theta = jax.tree.map(lambda x: x.astype(state_dtype), mean_theta)
             return new_c, mean_theta
 

@@ -20,7 +20,13 @@ import jax
 import jax.numpy as jnp
 
 from .schedules import as_schedule
-from .tree_util import count_params, global_norm, tree_mean_axis0, tree_random_normal
+from .tree_util import (
+    count_params,
+    global_norm,
+    tree_mean_axis0,
+    tree_random_normal,
+    tree_random_normal_per_chain,
+)
 from .types import Sampler
 
 
@@ -40,12 +46,18 @@ def ec_sgld(
     sync_every: int = 1,
     temperature: float = 1.0,
     chain_axis: str | None = None,
+    per_chain_noise: bool | None = None,
 ) -> Sampler:
     """``chain_axis``: mesh axis name for shard_map SPMD (see ec_sghmc /
-    DESIGN.md §2) — the s-periodic chain mean pmean-reduces over it."""
+    DESIGN.md §2) — the s-periodic chain mean pmean-reduces over it.
+    ``per_chain_noise`` (default: on under ``chain_axis``) keys each
+    chain's noise by its GLOBAL index, making the stream invariant to the
+    mesh layout — the DESIGN.md §7 equivalence contract."""
     schedule = as_schedule(step_size)
     minv = 1.0 / mass
     s = int(sync_every)
+    if per_chain_noise is None:
+        per_chain_noise = chain_axis is not None
 
     def init(params):
         center = tree_mean_axis0(jax.tree.map(lambda p: p.astype(jnp.float32), params))
@@ -59,13 +71,22 @@ def ec_sgld(
 
     def update(grads, state, params, rng):
         eps = schedule(state.step)
+        # shard_map contract (DESIGN.md §2): per-chain noise decorrelates
+        # across shards; the center noise k_r must stay shard-invariant
+        # so the replicated center state does not diverge.
         k_t, k_r = jax.random.split(rng)
-        if chain_axis is not None:
-            # shard_map contract (DESIGN.md §2): per-chain noise decorrelates
-            # across shards; the center noise k_r must stay shard-invariant
-            # so the replicated center state does not diverge.
-            k_t = jax.random.fold_in(k_t, jax.lax.axis_index(chain_axis))
-        noise_t = tree_random_normal(k_t, grads, jnp.float32)
+        if per_chain_noise:
+            local_k = jax.tree.leaves(grads)[0].shape[0]
+            offset = (
+                jax.lax.axis_index(chain_axis) * local_k
+                if chain_axis is not None
+                else 0
+            )
+            noise_t = tree_random_normal_per_chain(k_t, grads, offset, jnp.float32)
+        else:
+            if chain_axis is not None:
+                k_t = jax.random.fold_in(k_t, jax.lax.axis_index(chain_axis))
+            noise_t = tree_random_normal(k_t, grads, jnp.float32)
         noise_r = tree_random_normal(k_r, state.center_momentum, jnp.float32)
         sig_t = jnp.sqrt(2.0 * eps * temperature)
         sig_r = temperature**0.5 * eps * jnp.sqrt(2.0 * center_friction)

@@ -43,6 +43,19 @@ def tree_random_normal(rng, target, dtype=None):
     return jax.tree.unflatten(treedef, samples)
 
 
+def tree_random_normal_per_chain(rng, target, offset=0, dtype=None):
+    """One independent :func:`tree_random_normal` draw per leading-axis
+    (chain) slice of ``target``: chain ``i`` draws with
+    ``fold_in(rng, offset + i)``, so the stream depends only on the GLOBAL
+    chain index — invariant to how the chain axis is split over devices.
+    Inside ``shard_map`` pass ``offset = axis_index * local_K``; a
+    single-program run (offset=0) then produces bit-identical per-chain
+    noise to any sharded layout of the same chains (DESIGN.md §7)."""
+    k = jax.tree.leaves(target)[0].shape[0]
+    keys = jax.vmap(lambda i: jax.random.fold_in(rng, i))(offset + jnp.arange(k))
+    return jax.vmap(lambda kk, sl: tree_random_normal(kk, sl, dtype))(keys, target)
+
+
 def apply_updates(params, updates):
     """params + updates, preserving param dtypes (updates may be f32)."""
     return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)).astype(p.dtype), params, updates)

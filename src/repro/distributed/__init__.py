@@ -1,3 +1,18 @@
 from . import compression, sharding
-from .compression import Int8Codec, int8_codec
-from .sharding import build_spec, chain_specs, tree_shardings, tree_specs
+from .compression import (
+    Int8Codec,
+    compressed_tree_mean,
+    decode_packed,
+    encode_packed,
+    int8_codec,
+    packed_nbytes,
+    sync_wire_bytes,
+)
+from .sharding import (
+    build_spec,
+    chain_specs,
+    leading_axes_shardings,
+    leading_axes_specs,
+    tree_shardings,
+    tree_specs,
+)

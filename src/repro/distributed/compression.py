@@ -6,9 +6,23 @@ center/mean-theta is mathematically absorbed into the center-noise
 covariance C of Eq. 6 — EC-SGHMC is *designed* to tolerate a noisy center,
 so compressing its one collective is free robustness the naive approach
 does not enjoy (Async-SGHMC's stale gradients enter the dynamics directly).
+
+Two operating modes:
+
+* ``int8_codec().encode/decode`` — the structured round-trip (q, scale)
+  used by single-process runs (quantize the already-reduced mean: models
+  the wire noise without moving fewer bytes) and by the cache pool's idle
+  parking.
+* ``encode_packed``/``decode_packed``/``compressed_tree_mean`` — the WIRE
+  format for real meshes: the int8 payload and the f32 scales (bitcast to
+  int8) ride ONE flat int8 buffer, so the s-periodic exchange under
+  ``shard_map`` is a single ``all_gather`` of int8 — the program's only
+  collective, at ~4x fewer wire bytes than the raw f32 all-reduce
+  (``sync_wire_bytes`` quantifies both).
 """
 from __future__ import annotations
 
+import math
 from typing import NamedTuple
 
 import jax
@@ -38,3 +52,78 @@ def int8_codec() -> Int8Codec:
         return flat.reshape(-1)[: enc["n"]].reshape(enc["shape"])
 
     return Int8Codec(encode, decode, ratio=(1 + 4 / BLOCK) / 4)
+
+
+# ---------------------------------------------------------------------------
+# Packed wire format: (q int8 payload | f32 scales bitcast to int8) in one
+# flat int8 buffer, so a pytree's exchange is ONE collective operand.
+# ---------------------------------------------------------------------------
+
+
+def _num_blocks(n: int) -> int:
+    return max(1, math.ceil(n / BLOCK))
+
+
+def packed_nbytes(n: int) -> int:
+    """Wire bytes of one packed encoding of an ``n``-element f32 array."""
+    return _num_blocks(n) * (BLOCK + 4)
+
+
+def encode_packed(x) -> jnp.ndarray:
+    """Encode to a flat int8 wire buffer of ``packed_nbytes(x.size)``."""
+    enc = int8_codec().encode(x)
+    scale_bytes = jax.lax.bitcast_convert_type(
+        enc["scale"].astype(jnp.float32), jnp.int8
+    )  # (B, 1, 4)
+    return jnp.concatenate([enc["q"].reshape(-1), scale_bytes.reshape(-1)])
+
+
+def decode_packed(packed, shape, n: int) -> jnp.ndarray:
+    """Inverse of :func:`encode_packed` (``shape``/``n`` are static — in a
+    traced program they come from the pytree structure, not the wire)."""
+    b = _num_blocks(n)
+    q = packed[: b * BLOCK].reshape(b, BLOCK)
+    scale = jax.lax.bitcast_convert_type(
+        packed[b * BLOCK :].reshape(b, 1, 4), jnp.float32
+    ).reshape(b, 1)
+    return (q.astype(jnp.float32) * scale).reshape(-1)[:n].reshape(shape)
+
+
+def compressed_tree_mean(tree, axis_name: str):
+    """Wire-compressed chain mean for the s-periodic exchange inside
+    ``shard_map`` (the ``tree_mean_axis0(tree, axis_name)`` replacement):
+    each shard means its LOCAL chains (leading axis), packs every leaf's
+    int8 encoding into ONE flat int8 buffer, all-gathers that buffer over
+    ``axis_name`` — the program's single collective — then decodes every
+    shard's contribution and averages.  Equal per-shard chain counts are
+    assumed (mesh construction enforces ``K % axis_size == 0``), so the
+    mean of shard means IS the global chain mean, up to the int8
+    quantization noise that Eq. 6's center covariance C absorbs."""
+    leaves, treedef = jax.tree.flatten(tree)
+    local = [jnp.mean(x.astype(jnp.float32), axis=0) for x in leaves]
+    packed = jnp.concatenate([encode_packed(m) for m in local])
+    gathered = jax.lax.all_gather(packed, axis_name)  # (n_shards, L) int8
+
+    def unpack(row):
+        out, off = [], 0
+        for m in local:
+            nbytes = packed_nbytes(m.size)
+            out.append(decode_packed(row[off : off + nbytes], m.shape, m.size))
+            off += nbytes
+        return out
+
+    means = jax.vmap(unpack)(gathered)  # per-leaf (n_shards, ...) stacks
+    return jax.tree.unflatten(treedef, [m.mean(axis=0) for m in means])
+
+
+def sync_wire_bytes(num_params: int, *, compressed: bool, num_shards: int = 1) -> int:
+    """Per-device payload bytes moved by ONE s-periodic center exchange.
+
+    raw: the f32 all-reduce's operand (4 bytes/param); compressed: the
+    packed int8 all-gather's operand (``packed_nbytes``).  Both count the
+    collective's input payload — the apples-to-apples number
+    ``benchmarks/shard_sweep.py`` records (actual link traffic scales it
+    by the collective algorithm's (num_shards-1)/num_shards-style factor,
+    identically for both)."""
+    del num_shards
+    return packed_nbytes(num_params) if compressed else 4 * num_params

@@ -109,6 +109,36 @@ def chain_specs(tree, num_chains: int, axis_name: str = "chain"):
     return jax.tree.map(spec, tree)
 
 
+def leading_axes_specs(tree, axes: Sequence[Optional[str]], mesh):
+    """PartitionSpec pytree granting ``axes[i]`` to every leaf's i-th
+    LEADING dim when the axis exists on the mesh and divides the dim evenly
+    (else that dim replicates).  This is the serving engine's layout rule
+    (DESIGN.md §7): pooled caches are (member, slot, ...), slot masks are
+    (slot, ...), member stacks are (member, ...) — the leading dims ARE the
+    parallel axes, no logical-axis table needed."""
+
+    def spec(x):
+        shape = tuple(getattr(x, "shape", ()))
+        entries = []
+        for i, name in enumerate(axes):
+            if i >= len(shape):
+                break
+            ok = name is not None and name in mesh.shape and shape[i] % mesh.shape[name] == 0
+            entries.append(name if ok else None)
+        return PartitionSpec(*entries)
+
+    return jax.tree.map(spec, tree)
+
+
+def leading_axes_shardings(tree, axes, mesh):
+    """:func:`leading_axes_specs` as NamedSharding (device_put-ready)."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        leading_axes_specs(tree, axes, mesh),
+        is_leaf=lambda x: isinstance(x, PartitionSpec),
+    )
+
+
 # ---------------------------------------------------------------------------
 # Rule tables
 # ---------------------------------------------------------------------------

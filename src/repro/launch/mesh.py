@@ -8,12 +8,115 @@ multi-pod keeps the ``pod`` axis, and chains map onto (pod, chain): the
 cross-pod link only carries the s-periodic elastic-coupling exchange, which
 is the paper's deployment story.
 
+``initialize_distributed`` / ``force_host_device_count`` /
+``forced_device_env`` are the multi-process launch path (DESIGN.md §7):
+real multi-host meshes go through ``jax.distributed.initialize``; a single
+host can still exercise every collective by forcing N CPU devices via
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` — the fallback the
+multi-device test harness and ``benchmarks/shard_sweep.py`` run on.
+
 Everything here is a FUNCTION (no module-level jax device state) so imports
 never lock the device count before dryrun.py sets XLA_FLAGS.
 """
 from __future__ import annotations
 
+import os
+
 import jax
+import numpy as np
+
+_FORCE_FLAG = "--xla_force_host_platform_device_count"
+
+
+def force_host_device_count(n: int) -> str:
+    """Single-host forced-multi-device fallback: rewrite ``XLA_FLAGS`` in
+    THIS process's environment to force ``n`` host (CPU) devices.  Must run
+    before jax initializes its backends — raises if the backend is already
+    locked to a different device count (the flag would silently not apply).
+    Returns the new ``XLA_FLAGS`` value."""
+    flags = [
+        f for f in os.environ.get("XLA_FLAGS", "").split() if not f.startswith(_FORCE_FLAG)
+    ]
+    flags.append(f"{_FORCE_FLAG}={n}")
+    os.environ["XLA_FLAGS"] = " ".join(flags)
+    import jax._src.xla_bridge as xb
+
+    if getattr(xb, "_backends", None):  # backends already initialized
+        if jax.device_count() != n:
+            raise RuntimeError(
+                f"jax already initialized with {jax.device_count()} devices; "
+                f"force_host_device_count({n}) must run before first device use "
+                "(launch a subprocess with forced_device_env instead)"
+            )
+    return os.environ["XLA_FLAGS"]
+
+
+def forced_device_env(n: int, base_env: dict | None = None) -> dict:
+    """Environment for a SUBPROCESS with ``n`` forced host devices — the
+    safe way to get a multi-device mesh when the current process already
+    holds an initialized single-device backend (pytest, benchmarks)."""
+    env = dict(os.environ if base_env is None else base_env)
+    flags = [
+        f for f in env.get("XLA_FLAGS", "").split() if not f.startswith(_FORCE_FLAG)
+    ]
+    flags.append(f"{_FORCE_FLAG}={n}")
+    env["XLA_FLAGS"] = " ".join(flags)
+    # force the CPU plugin: the flag only exists on the host platform
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return env
+
+
+def initialize_distributed(
+    coordinator_address: str | None = None,
+    num_processes: int | None = None,
+    process_id: int | None = None,
+    local_device_ids=None,
+) -> tuple[int, int]:
+    """``jax.distributed.initialize`` wiring for the multi-process launch
+    path.  No-op (returns ``(0, 1)``) when nothing identifies a
+    multi-process job — neither arguments nor the standard environment
+    (``JAX_COORDINATOR_ADDRESS`` or a cluster auto-detect env jax knows) —
+    so single-process entry points can call it unconditionally.  Returns
+    ``(process_index, process_count)``."""
+    if (
+        coordinator_address is None
+        and num_processes is None
+        and process_id is None
+        and not os.environ.get("JAX_COORDINATOR_ADDRESS")
+    ):
+        return 0, 1
+    jax.distributed.initialize(
+        coordinator_address=coordinator_address,
+        num_processes=num_processes,
+        process_id=process_id,
+        local_device_ids=local_device_ids,
+    )
+    return jax.process_index(), jax.process_count()
+
+
+def make_chain_mesh(num_devices: int | None = None, *, axis: str = "chain"):
+    """1-D ``(chain,)`` mesh over the first ``num_devices`` devices
+    (default: all) — the sampler scale-out mesh ``ChainExecutor.run_sharded``
+    consumes.  Works identically on real accelerators, multi-process
+    device sets, and the forced-host-device fallback."""
+    devs = jax.devices()
+    n = len(devs) if num_devices is None else int(num_devices)
+    if n > len(devs):
+        raise ValueError(f"requested {n} devices, only {len(devs)} available")
+    return jax.sharding.Mesh(np.asarray(devs[:n]), (axis,))
+
+
+def make_engine_mesh(num_member_shards: int, num_slot_shards: int | None = None,
+                     *, axes: tuple[str, str] = ("member", "slot")):
+    """(member, slot) mesh for the sharded ``ServeEngine``: the K ensemble
+    axis shards over ``axes[0]``, the decode-slot axis over ``axes[1]``.
+    Defaults to spreading all remaining devices over slots."""
+    devs = jax.devices()
+    m = int(num_member_shards)
+    s = len(devs) // m if num_slot_shards is None else int(num_slot_shards)
+    if m * s > len(devs):
+        raise ValueError(f"mesh {m}x{s} needs {m*s} devices, have {len(devs)}")
+    return jax.sharding.Mesh(np.asarray(devs[: m * s]).reshape(m, s), axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False, size: int = 16):

@@ -460,12 +460,15 @@ class ChainExecutor:
         """Jitted shard_map chunk: the carry shards on the chain axis via
         the ``chain_specs`` shape contract.  The per-step key is
         SHARD-INVARIANT: the sampler must have been built with
-        ``chain_axis=<name>``, which makes it (a) pmean-reduce its sync
-        mean and (b) fold ``axis_index`` into its per-chain noise stream
-        only — per-chain noise decorrelates across shards while replicated
-        center state sees identical noise everywhere (DESIGN.md §2).
-        No per-step outputs — the production configuration keeps moments in
-        the carry and nothing else leaves the device."""
+        ``chain_axis=<name>``, which makes it (a) reduce its sync mean over
+        that axis (pmean, or one packed-int8 all_gather when built with
+        ``compression=`` — the wire-compressed center exchange) and
+        (b) key its per-chain noise by the GLOBAL chain index — per-chain
+        noise decorrelates across shards and is invariant to the mesh
+        layout, while replicated center state sees identical noise
+        everywhere (DESIGN.md §2/§7).  No per-step outputs — the production
+        configuration keeps moments in the carry and nothing else leaves
+        the device."""
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
 
@@ -505,6 +508,23 @@ class ChainExecutor:
         carry.pop("ess")  # probe shapes are global; keep the sharded carry minimal
         return carry
 
+    @staticmethod
+    def _check_mesh(mesh, chain_axis: str, num_chains: int) -> None:
+        """Multi-device contract (DESIGN.md §7): the chain axis must exist
+        on the mesh and divide K evenly — equal per-shard chain counts are
+        what make the hierarchical (local mean, cross-shard mean) exchange
+        equal the global chain mean."""
+        if chain_axis not in mesh.shape:
+            raise ValueError(
+                f"mesh has axes {tuple(mesh.shape)}; no {chain_axis!r} axis"
+            )
+        axis_size = mesh.shape[chain_axis]
+        if num_chains % axis_size != 0:
+            raise ValueError(
+                f"num_chains={num_chains} must be divisible by the "
+                f"{chain_axis!r} mesh axis (size {axis_size})"
+            )
+
     def run_sharded(
         self,
         params,
@@ -521,11 +541,19 @@ class ChainExecutor:
         """Device-resident run with the chain axis sharded over ``mesh``
         (chunked like ``run``; no traces/stats — moments stay in carry).
 
+        ``mesh`` may carry a ``chain_axis`` of ANY size that divides the
+        chain count — 1 (the SPMD emulation) through one device per chain.
+        The compiled program is layout-invariant for samplers built with
+        ``chain_axis=``: per-chain trajectories are bit-identical across
+        mesh sizes wherever reduction order allows (DESIGN.md §7, gated by
+        tests/test_sharding.py).
+
         ``specs``: explicit carry PartitionSpec pytree, overriding the
         ``chain_specs`` shape heuristic — REQUIRED when replicated state has
         a leading dim that coincidentally equals ``num_chains`` (the
         heuristic would shard it; see ``chain_specs``' docstring)."""
         num_chains = num_chains or self._sweep_size(params)
+        self._check_mesh(mesh, chain_axis, num_chains)
         carry = self._sharded_carry(params, state, start_step)
         t0 = time.perf_counter()
         done = 0
@@ -549,8 +577,10 @@ class ChainExecutor:
                       chain_axis: str = "chain", num_chains: int | None = None,
                       specs=None):
         """Lowered (pre-compile) sharded chunk for HLO inspection — the
-        one-collective-per-sync-period acceptance check reads its text."""
+        one-collective-per-sync-period acceptance check reads its text
+        (raw center exchange: one all-reduce; compressed: one all-gather)."""
         num_chains = num_chains or self._sweep_size(params)
+        self._check_mesh(mesh, chain_axis, num_chains)
         carry = self._sharded_carry(params, state, 0)
         fn = self._build_sharded(num_steps, mesh, chain_axis, carry, num_chains, specs)
         return fn.lower(key, carry)

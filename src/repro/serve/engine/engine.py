@@ -111,6 +111,9 @@ class ServeEngine:
         compress_parked: bool = False,
         record_logprobs: bool = False,
         seed: int = 0,
+        mesh=None,
+        member_axis: str = "member",
+        slot_axis: str = "slot",
     ):
         if bma not in BMA_MODES:
             raise ValueError(f"bma must be one of {BMA_MODES}")
@@ -145,12 +148,65 @@ class ServeEngine:
         self._key_admit = jax.random.fold_in(base, 1)
         self.trace_counts: Counter = Counter()
         self.decode_steps = 0
-        # the two compiled entry points; caches are donated through both so
-        # the pool's buffers are recycled in place, never copied per tick
-        self._decode = jax.jit(self._decode_fn, donate_argnums=(1,))
-        self._admit = jax.jit(self._admit_fn, donate_argnums=(1,))
+        # Multi-device layout (DESIGN.md §7): pooled caches (K, S, ...) shard
+        # member/slot over their two leading dims, slot-state arrays shard
+        # over slot, members over member; any dim a mesh axis does not divide
+        # evenly replicates.  Every sharding is pinned explicitly on BOTH
+        # sides of the two jitted programs so the donated-buffer feedback
+        # loop (decode output -> next decode input) has fixed-point layouts —
+        # that is what preserves the one-compiled-decode-program invariant
+        # under a mesh.
+        self.mesh = mesh
+        self._member_axis, self._slot_axis = member_axis, slot_axis
+        self._placed_version: int | None = None
+        if mesh is None:
+            # the two compiled entry points; caches are donated through both
+            # so the pool's buffers are recycled in place, never copied
+            self._decode = jax.jit(self._decode_fn, donate_argnums=(1,))
+            self._admit = jax.jit(self._admit_fn, donate_argnums=(1,))
+        else:
+            from jax.sharding import NamedSharding, PartitionSpec
+
+            from repro.distributed.sharding import leading_axes_shardings
+
+            rep = NamedSharding(mesh, PartitionSpec())
+            cache_s = leading_axes_shardings(self.pool.caches, (member_axis, slot_axis), mesh)
+            mem_s = leading_axes_shardings(self.registry.members, (member_axis,), mesh)
+            tok_s = leading_axes_shardings(self._tokens, (slot_axis,), mesh)
+            slot_s = leading_axes_shardings(self._done, (slot_axis,), mesh)
+            self._cache_shardings, self._member_shardings = cache_s, mem_s
+            self.pool.caches = jax.device_put(self.pool.caches, cache_s)
+            self._tokens = jax.device_put(self._tokens, tok_s)
+            self._done = jax.device_put(self._done, slot_s)
+            self._budget = jax.device_put(self._budget, slot_s)
+            self._decode = jax.jit(
+                self._decode_fn,
+                donate_argnums=(1,),
+                in_shardings=(mem_s, cache_s, tok_s, slot_s, slot_s, rep),
+                # (emit, feed, caches, done, budget, logp) — logp is (S, V),
+                # slot-leading like the masks
+                out_shardings=(slot_s, tok_s, cache_s, slot_s, slot_s, slot_s),
+            )
+            self._admit = jax.jit(
+                self._admit_fn,
+                donate_argnums=(1,),
+                in_shardings=(mem_s, cache_s, tok_s, slot_s, slot_s, rep, rep, rep, rep),
+                out_shardings=(cache_s, tok_s, slot_s, slot_s, rep, rep, rep),
+            )
 
     # -- compiled programs --------------------------------------------------
+
+    def _members(self):
+        """Registry members, placed on the mesh.  ``device_put`` with the
+        member sharding is cached on ``registry.version`` so a live refresh
+        re-places exactly once per promotion, not per decode tick (re-putting
+        an already-placed tree is a no-op but still walks the pytree)."""
+        if self.mesh is not None and self._placed_version != self.registry.version:
+            self.registry.members = jax.device_put(
+                self.registry.members, self._member_shardings
+            )
+            self._placed_version = self.registry.version
+        return self.registry.members
 
     @property
     def decode_trace_count(self) -> int:
@@ -233,7 +289,7 @@ class ServeEngine:
         key = jax.random.fold_in(self._key_admit, req.rid)
         prompt = jnp.asarray(req.prompt)[None]
         out = self._admit(
-            self.registry.members,
+            self._members(),
             self.pool.caches,
             self._tokens,
             self._done,
@@ -296,7 +352,7 @@ class ServeEngine:
             if active:
                 key = jax.random.fold_in(self._key_decode, step)
                 emit, feed, caches, done, budget, logp = self._decode(
-                    self.registry.members,
+                    self._members(),
                     self.pool.caches,
                     self._tokens,
                     self._done,

@@ -7,15 +7,32 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from util import import_hypothesis
 
 from repro import core
 from repro.distributed import Int8Codec, int8_codec
-from repro.distributed.compression import BLOCK
+from repro.distributed.compression import (
+    BLOCK,
+    decode_packed,
+    encode_packed,
+    packed_nbytes,
+    sync_wire_bytes,
+)
+
+given, settings, st = import_hypothesis()
 
 
 @pytest.fixture(scope="module")
 def codec():
     return int8_codec()
+
+
+def _quant_bound(flat):
+    """Elementwise round-trip bound: scale/2 per block, scale=max|block|/127."""
+    pad = (-flat.size) % BLOCK
+    blocks = np.pad(flat, (0, pad)).reshape(-1, BLOCK)
+    scale = np.abs(blocks).max(axis=1, keepdims=True) / 127.0
+    return np.repeat(scale, BLOCK, axis=1).reshape(-1)[: flat.size]
 
 
 class TestRoundTrip:
@@ -68,6 +85,111 @@ class TestRoundTrip:
 
         assert dist.int8_codec is int8_codec
         assert isinstance(int8_codec(), Int8Codec)
+
+
+class TestPaddingEdges:
+    """The pad-to-BLOCK boundary cases: n % BLOCK in {0, 1, 255} — full
+    blocks, a lone element in the last block, and one-short-of-full."""
+
+    @pytest.mark.parametrize("rem", [0, 1, BLOCK - 1])
+    @pytest.mark.parametrize("nblocks", [1, 3])
+    def test_roundtrip_at_block_remainders(self, codec, rem, nblocks):
+        n = nblocks * BLOCK + rem
+        x = jax.random.normal(jax.random.PRNGKey(n), (n,)) * 2.0
+        dec = np.asarray(codec.decode(codec.encode(x)))
+        assert dec.shape == (n,)
+        flat = np.asarray(x, np.float32)
+        assert np.all(np.abs(dec - flat) <= 0.5 * _quant_bound(flat) + 1e-7)
+
+    @pytest.mark.parametrize("rem", [0, 1, BLOCK - 1])
+    def test_packed_roundtrip_at_block_remainders(self, rem):
+        n = 2 * BLOCK + rem
+        x = jax.random.normal(jax.random.PRNGKey(1000 + n), (n,), jnp.float32)
+        packed = encode_packed(x)
+        assert packed.dtype == jnp.int8 and packed.shape == (packed_nbytes(n),)
+        dec = np.asarray(decode_packed(packed, (n,), n))
+        flat = np.asarray(x, np.float32)
+        assert np.all(np.abs(dec - flat) <= 0.5 * _quant_bound(flat) + 1e-7)
+
+    def test_zero_blocks_exact(self, codec):
+        """All-zero blocks (scale 0) must decode to exact zeros, not NaN
+        from a 0/0 — including mixed zero/non-zero block layouts."""
+        x = jnp.concatenate([jnp.zeros((BLOCK,)), jnp.ones((BLOCK,)), jnp.zeros((5,))])
+        dec = np.asarray(codec.decode(codec.encode(x)))
+        np.testing.assert_array_equal(dec[:BLOCK], 0.0)
+        np.testing.assert_array_equal(dec[2 * BLOCK :], 0.0)
+        np.testing.assert_allclose(dec[BLOCK : 2 * BLOCK], 1.0, rtol=1e-6)
+        packed = np.asarray(decode_packed(encode_packed(x), x.shape, x.size))
+        np.testing.assert_array_equal(packed[:BLOCK], 0.0)
+
+    def test_denormal_inputs_finite(self, codec):
+        """Subnormal f32 magnitudes produce subnormal scales; the decode
+        must stay finite with no 1/scale overflow.  The scale/2 bound does
+        NOT survive subnormal rounding — the contract degrades to 'error
+        never exceeds the block magnitude', which is what keeps the sync
+        sound (errors this size vanish into the center-noise covariance)."""
+        tiny = np.float32(1e-42)  # subnormal
+        x = jnp.asarray(np.array([tiny, -tiny, 0.0, tiny / 2] * 64, np.float32))
+        dec = np.asarray(codec.decode(codec.encode(x)))
+        assert np.all(np.isfinite(dec))
+        flat = np.asarray(x, np.float32)
+        assert np.abs(dec - flat).max() <= 2 * np.abs(flat).max()
+
+
+class TestProperties:
+    """Hypothesis round-trip properties (skip cleanly without hypothesis —
+    the deterministic edge tests above keep running regardless)."""
+
+    @given(
+        data=st.lists(
+            st.floats(min_value=-1e6, max_value=1e6, width=32),
+            min_size=1,
+            max_size=3 * BLOCK,
+        )
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_roundtrip_error_within_half_scale(self, data):
+        flat = np.asarray(data, np.float32)
+        codec = int8_codec()
+        dec = np.asarray(codec.decode(codec.encode(jnp.asarray(flat))))
+        assert dec.shape == flat.shape
+        assert np.all(np.isfinite(dec))
+        assert np.all(np.abs(dec - flat) <= 0.5 * _quant_bound(flat) + 1e-6)
+
+    @given(
+        data=st.lists(
+            st.floats(min_value=-1e4, max_value=1e4, width=32),
+            min_size=1,
+            max_size=2 * BLOCK + 1,
+        )
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_packed_agrees_with_codec(self, data):
+        """The flat wire format (one int8 buffer: q payload ++ bitcast
+        scales) must decode to EXACTLY what the dict codec decodes to —
+        same quantizer, different framing."""
+        flat = jnp.asarray(np.asarray(data, np.float32))
+        codec = int8_codec()
+        via_dict = np.asarray(codec.decode(codec.encode(flat)))
+        via_packed = np.asarray(decode_packed(encode_packed(flat), flat.shape, flat.size))
+        np.testing.assert_array_equal(via_packed, via_dict)
+
+
+class TestWireBytes:
+    def test_packed_nbytes_layout(self):
+        # per block: BLOCK int8 lanes + one f32 scale bitcast to 4 int8
+        assert packed_nbytes(BLOCK) == BLOCK + 4
+        assert packed_nbytes(BLOCK + 1) == 2 * (BLOCK + 4)
+        assert packed_nbytes(1) == BLOCK + 4
+
+    def test_sync_wire_bytes_ratio(self):
+        n = 40 * BLOCK  # block-aligned; padding only ever adds < 1 block
+        raw = sync_wire_bytes(n, compressed=False)
+        comp = sync_wire_bytes(n, compressed=True)
+        assert raw == 4 * n
+        assert comp == packed_nbytes(n)
+        assert comp / raw < 0.26  # the ~4x wire saving the bench records
+        assert sync_wire_bytes(n + 1, compressed=True) == comp + BLOCK + 4
 
 
 class TestECSGHMCIntegration:

@@ -470,6 +470,36 @@ _SHARDED_SCRIPT = textwrap.dedent("""
         jax.random.key(0), tree)
     diffs = [float(np.abs(np.asarray(c) - np.asarray(c)[0]).max()) for c in cents]
     print(f"CENTER maxdiff={max(diffs):.3e}")
+
+    # compressed center exchange: the packed-int8 all_gather must be the
+    # program's ONLY collective.  NB the lowered text is StableHLO MLIR and
+    # the substring "all_gather" also appears in the instruction's
+    # all_gather_dim attribute — count call sites, not substrings.
+    from repro.distributed import int8_codec
+    csampler = core.ec_sghmc(step_size=1e-2, alpha=1.0, sync_every=SYNC,
+                             noise_convention="eq6", chain_axis="chain",
+                             compression=int8_codec())
+    cex = ChainExecutor(sampler=csampler, grad_fn=lambda t, _b: t - MU,
+                        moments=True, chunk_steps=STEPS, key_mode="fold")
+    params = jnp.broadcast_to(jnp.array([-2.0, 3.0]), (K, 2)) + 0.0
+    state = csampler.init(params)
+    chlo = cex.lower_sharded(params, state, num_steps=STEPS,
+                             key=jax.random.key(0), mesh=mesh).as_text()
+    c_allgather = chlo.count('"stablehlo.all_gather"(')
+    c_allreduce = chlo.count("all_reduce") + chlo.count("all-reduce")
+    c_others = sum(chlo.count(op) for op in
+                   ("all_to_all", "all-to-all",
+                    "collective_permute", "collective-permute"))
+    print(f"CCOLLECTIVES allgather={c_allgather} allreduce={c_allreduce} "
+          f"others={c_others}")
+
+    params = jnp.broadcast_to(jnp.array([-2.0, 3.0]), (K, 2)) + 0.0
+    state = csampler.init(params)
+    cres = cex.run_sharded(params, state, num_steps=2048, key=jax.random.key(0),
+                           mesh=mesh)
+    cok = np.all(np.isfinite(np.asarray(cres.params)))
+    cmean = np.asarray(diag.welford_mean(cres.moments)).mean(axis=0)
+    print(f"CRUN ok={cok} mean0={cmean[0]:.3f} mean1={cmean[1]:.3f}")
 """)
 
 
@@ -512,6 +542,23 @@ class TestShardedCollective:
         assert abs(float(fields["mean0"]) - 2.0) < 0.5, line
         assert abs(float(fields["mean1"]) + 1.0) < 0.5, line
         assert float(fields["spread"]) < 3.0, line
+
+    def test_compressed_exchange_single_all_gather(self, sharded_output):
+        """With ``compression=int8_codec()`` the sync's packed exchange
+        lowers to exactly ONE all_gather — no all_reduce, nothing else: the
+        4x-smaller wire format does not cost a second collective."""
+        line = [l for l in sharded_output.splitlines() if l.startswith("CCOLLECTIVES")][0]
+        fields = dict(kv.split("=") for kv in line.split()[1:])
+        assert int(fields["allgather"]) == 1, line
+        assert int(fields["allreduce"]) == 0, line
+        assert int(fields["others"]) == 0, line
+
+    def test_compressed_run_stays_coupled(self, sharded_output):
+        line = [l for l in sharded_output.splitlines() if l.startswith("CRUN")][0]
+        fields = dict(kv.split("=") for kv in line.split()[1:])
+        assert fields["ok"] == "True"
+        assert abs(float(fields["mean0"]) - 2.0) < 0.5, line
+        assert abs(float(fields["mean1"]) + 1.0) < 0.5, line
 
     def test_replicated_center_stays_replicated(self, sharded_output):
         """Center state is replicated by spec (check_rep=False hides

@@ -220,6 +220,24 @@ class TestECSGHMCStationary:
         assert_matches_oracle(traj, oracle, check_cross=True, label="ec-a1-s4")
 
     @pytest.mark.slow
+    def test_alpha1_int8_center_exchange(self):
+        """Acceptance gate for the compressed exchange (DESIGN.md §7):
+        EC-SGHMC whose s-periodic center exchange round-trips through the
+        int8 codec must hold the SAME closed-form stationary bands — the
+        <= scale/2 quantization error is absorbed into the center-noise
+        covariance C of Eq. 6 and is statistically invisible at 3 sigma."""
+        from repro.distributed import int8_codec
+
+        sampler = core.ec_sghmc(step_size=0.1, alpha=1.0, sync_every=4,
+                                compression=int8_codec(), **EC_KW)
+        traj = run_chains(sampler, (K, D), steps=40_000, burn=4_000, seed=21)
+        oracle = diag.ec_sghmc_stationary(
+            step_size=0.1, alpha=1.0, num_chains=K, sync_every=4,
+            precision=LAM, mu=MU, **EC_KW,
+        )
+        assert_matches_oracle(traj, oracle, check_cross=True, label="ec-int8-a1-s4")
+
+    @pytest.mark.slow
     def test_eq4_convention(self):
         """The staleness-sweep configuration (eq4 noise, weaker coupling)."""
         kw = dict(friction=1.0, center_friction=1.0, noise_convention="eq4",

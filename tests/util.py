@@ -1,11 +1,71 @@
 """Shared test helpers."""
 from __future__ import annotations
 
+import os
+import pathlib
+import subprocess
+import sys
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro import core
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+MULTIDEVICE_DEVICES = 8
+
+
+def multidevice_env(n: int = MULTIDEVICE_DEVICES) -> dict:
+    """Subprocess environment for the forced-``n``-device harness: CPU
+    platform with ``--xla_force_host_platform_device_count=n`` plus the
+    child marker that un-skips ``@pytest.mark.multidevice`` tests."""
+    from repro.launch.mesh import forced_device_env
+
+    env = forced_device_env(n)
+    env["REPRO_MULTIDEVICE_CHILD"] = "1"
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (str(REPO_ROOT / "src"), env.get("PYTHONPATH")) if p
+    )
+    return env
+
+
+def require_devices(n: int = MULTIDEVICE_DEVICES):
+    """Graceful in-child skip when forcing did not take (e.g. the user
+    pinned ``JAX_PLATFORMS`` to a non-CPU plugin, where the forced-host-
+    device flag does not exist).  Returns the device list otherwise."""
+    import pytest
+
+    devs = jax.devices()
+    if len(devs) < n:
+        pytest.skip(
+            f"needs {n} devices, backend has {len(devs)} "
+            "(forced host-device count unavailable on this platform)"
+        )
+    return devs
+
+
+def run_multidevice_suite(extra_args=(), n: int = MULTIDEVICE_DEVICES, timeout: int = 900):
+    """Re-launch pytest in a forced-``n``-device subprocess over the
+    ``multidevice``-marked subset; returns CompletedProcess.  This is the
+    single entry point shared by the CI lane and the slow relaunch proxy."""
+    cmd = [
+        sys.executable,
+        "-m",
+        "pytest",
+        "-q",
+        "-m",
+        "multidevice",
+        *extra_args,
+    ]
+    return subprocess.run(
+        cmd,
+        cwd=str(REPO_ROOT),
+        env=multidevice_env(n),
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+    )
 
 
 def run_sampler(sampler, params, grad_fn, num_steps, seed=0, collect_from=0):
