@@ -6,7 +6,10 @@ smoke-sized qwen3 config and records, per (slots, K, offered-load)
 configuration: p50/p99 request latency, p50/p99 first-token latency, and
 aggregate tokens/s — the serving tier's perf trajectory across PRs.  One
 configuration additionally runs with live snapshot refresh enabled to price
-the refresh cost in-band.
+the refresh cost in-band, and a dense-vs-paged sweep (with and without
+prefix sharing, on a prompt-pool trace) records the DESIGN.md §8 memory
+axes: KV bytes per request (high-water for paged, static footprint for
+dense) and the prefix-cache hit rate.
 
 CSV rows keep the historical ``name,us_per_call,derived`` shape:
 us_per_call = mean decode-step wall time, derived = tokens/s.
@@ -44,7 +47,8 @@ def _members(cfg, model, k: int, seed: int = 0):
 PROMPT_LENS = (8, 16)
 
 
-def _one_config(cfg, model, slots, k, interarrival, *, num_requests, max_new, refresh=False):
+def _one_config(cfg, model, slots, k, interarrival, *, num_requests, max_new,
+                refresh=False, prompt_pool=0, **engine_kw):
     registry = SnapshotRegistry(_members(cfg, model, k))
     refresher = None
     if refresh:
@@ -53,6 +57,7 @@ def _one_config(cfg, model, slots, k, interarrival, *, num_requests, max_new, re
         cfg, model, registry,
         num_slots=slots, max_seq=max(PROMPT_LENS) + max_new,
         refresher=refresher, refresh_every=8 if refresh else 0,
+        **engine_kw,
     )
     trace = synthetic_trace(
         num_requests,
@@ -61,11 +66,22 @@ def _one_config(cfg, model, slots, k, interarrival, *, num_requests, max_new, re
         max_new=max_new,
         mean_interarrival=interarrival,
         seed=1,
+        prompt_pool=prompt_pool,
     )
     report = engine.run(trace)
     assert report.trace_counts.get("decode") == 1, report.trace_counts
     pct = report.latency_percentiles()
-    return report, pct
+    return engine, report, pct
+
+
+def _kv_bytes(engine):
+    """Dense: the static pool footprint (every slot pays max_seq up front).
+    Paged: high-water page bytes actually touched over the run."""
+    if engine.paged:
+        return engine.pool.stats()["bytes_high_water"]
+    return sum(
+        leaf.size * leaf.dtype.itemsize for leaf in jax.tree.leaves(engine.pool.caches)
+    )
 
 
 def run():
@@ -76,7 +92,7 @@ def run():
     max_new = 8 if QUICK else 24
     configs_out = []
     for slots, k, inter in grid:
-        report, pct = _one_config(
+        _, report, pct = _one_config(
             cfg, model, slots, k, inter, num_requests=num_requests, max_new=max_new
         )
         name = f"serve_s{slots}_k{k}_ia{inter:g}"
@@ -96,9 +112,50 @@ def run():
                 **{kk: round(v, 6) for kk, v in pct.items()},
             }
         )
-    # price the live-refresh path on the middle configuration
+    # dense vs paged (± prefix sharing) on the middle configuration, over a
+    # prompt-pool trace so sharing has something to hit
     slots, k, inter = grid[1]
-    report, pct = _one_config(
+    pool_size = 3
+    for variant, kw in (
+        ("dense", {}),
+        ("paged", {"paged": True, "block_size": 8}),
+        ("paged_noshare", {"paged": True, "block_size": 8, "prefix_sharing": False}),
+    ):
+        engine, report, pct = _one_config(
+            cfg, model, slots, k, inter, num_requests=num_requests,
+            max_new=max_new, prompt_pool=pool_size, **kw,
+        )
+        kv = _kv_bytes(engine)
+        per_req = kv / max(len(report.results), 1)
+        st = engine.pool.stats()
+        hit_rate = st.get("prefix_hit_rate", 0.0)
+        emit(
+            f"serve_s{slots}_k{k}_{variant}",
+            1e6 * report.wall_s / max(report.decode_steps, 1),
+            f"{per_req / 1024:.1f}KiB/req",
+        )
+        configs_out.append(
+            {
+                "slots": slots,
+                "ensemble": k,
+                "mean_interarrival": inter,
+                "variant": variant,
+                "prompt_pool": pool_size,
+                "requests": len(report.results),
+                "total_tokens": report.total_tokens,
+                "tokens_per_s": round(report.tokens_per_s, 2),
+                "wall_s": round(report.wall_s, 4),
+                "kv_bytes": int(kv),
+                "kv_bytes_per_request": round(per_req, 1),
+                "prefix_hit_rate": round(float(hit_rate), 4),
+                "prefix_hits": st.get("prefix_hits", 0),
+                "blocks_high_water": st.get("blocks_high_water"),
+                "decode_traces": report.trace_counts.get("decode"),
+                **{kk: round(v, 6) for kk, v in pct.items()},
+            }
+        )
+    # price the live-refresh path on the middle configuration
+    _, report, pct = _one_config(
         cfg, model, slots, k, inter, num_requests=num_requests, max_new=max_new, refresh=True
     )
     emit(

@@ -3,7 +3,16 @@ interpret mode on CPU; compiled on real TPU):
 
 * fused_ecsghmc — one-pass Eq. 6 sampler update (memory-bound hot spot)
 * flash_attention — blocked attention w/ sliding-window block skipping
+* paged_attention — single-token decode against a block-paged KV pool
+* bma_select — fused BMA mixture + temperature/top-k token selection
 * rglru — chunked linear-recurrence scan
 """
-from .ops import flash_attention, fused_ec_update, fused_ec_update_tree, rglru_scan
+from .ops import (
+    flash_attention,
+    fused_bma_select,
+    fused_ec_update,
+    fused_ec_update_tree,
+    paged_attention,
+    rglru_scan,
+)
 from . import ref

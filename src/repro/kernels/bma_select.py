@@ -1,0 +1,112 @@
+"""Fused BMA mixture + token selection Pallas kernel.
+
+The engine's decode epilogue reads the (K, S, V) member-logit tensor three
+times on the unfused path: per-member log-softmax, the K-mixture reduce,
+then temperature/top-k selection.  This kernel does all of it in ONE pass
+per slot — each grid step pulls one (K, V) logit tile into VMEM and emits
+the mixture log-prob row plus the selected token, so the K-member ensemble
+pays a single memory pass per decoded token.
+
+Exact-equivalence contract (pinned in tests/test_paged_attention.py):
+  * mixture rows match ``serve.engine.bma.mixture_logprobs`` (f32 math,
+    both "probs" and "logprobs" modes);
+  * greedy tokens match ``jnp.argmax`` (first-occurrence tie-break);
+  * sampled tokens match ``jax.random.categorical`` EXACTLY given the same
+    key, because categorical is argmax(logits + Gumbel) and the caller
+    passes in the identical ``jax.random.gumbel(key, (S, V), f32)`` draw
+    (the kernel only fuses the mask/add/argmax);
+  * top-k keeps ties at the k-th-largest threshold, like
+    ``sampling._top_k_mask``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .flash_attention import _CompilerParams, NEG_INF
+
+
+def _first_argmax(row):
+    """(1, V) f32 -> scalar int32 index of the first maximum (jnp.argmax
+    tie-break), via an iota-min trick that lowers to TPU reductions."""
+    V = row.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, row.shape, 1)
+    hit = row == jnp.max(row, axis=-1, keepdims=True)
+    return jnp.min(jnp.where(hit, iota, V)).astype(jnp.int32)
+
+
+def _bma_select_kernel(
+    logits_ref, gumbel_ref, logp_ref, tok_ref, *, mode, temperature, top_k
+):
+    x = logits_ref[:, 0, :].astype(jnp.float32)  # (K, V)
+    K = x.shape[0]
+    # per-member log-softmax
+    m = jnp.max(x, axis=-1, keepdims=True)
+    lp = x - (m + jnp.log(jnp.sum(jnp.exp(x - m), axis=-1, keepdims=True)))
+    if mode == "probs":  # logsumexp over members - log K
+        mk = jnp.max(lp, axis=0, keepdims=True)  # (1, V)
+        mix = mk + jnp.log(jnp.sum(jnp.exp(lp - mk), axis=0, keepdims=True))
+        mix = mix - jnp.log(jnp.float32(K))
+    else:  # "logprobs": renormalized mean log-prob
+        a = jnp.mean(lp, axis=0, keepdims=True)  # (1, V)
+        ma = jnp.max(a, axis=-1, keepdims=True)
+        mix = a - (ma + jnp.log(jnp.sum(jnp.exp(a - ma), axis=-1, keepdims=True)))
+    logp_ref[...] = mix  # (1, V)
+
+    if temperature <= 0.0:
+        tok_ref[0, 0] = _first_argmax(mix)
+        return
+    sel = mix / jnp.float32(temperature)
+    if top_k:
+        V = sel.shape[-1]
+        k = min(int(top_k), V)
+        iota = jax.lax.broadcasted_iota(jnp.int32, sel.shape, 1)
+
+        def strike(_, masked):
+            # remove ONE occurrence of the current max so duplicates count
+            # toward k, exactly like lax.top_k's sorted tail
+            cur = jnp.max(masked, axis=-1, keepdims=True)
+            first = jnp.min(jnp.where(masked == cur, iota, V))
+            return jnp.where(iota == first, NEG_INF, masked)
+
+        masked = jax.lax.fori_loop(0, k - 1, strike, sel)
+        thresh = jnp.max(masked, axis=-1, keepdims=True)  # k-th largest
+        sel = jnp.where(sel < thresh, NEG_INF, sel)  # ties at thresh kept
+    sel = sel + gumbel_ref[...].astype(jnp.float32)
+    tok_ref[0, 0] = _first_argmax(sel)
+
+
+def bma_select(
+    logits, gumbel, *, mode: str, temperature: float, top_k: int,
+    interpret: bool = True,
+):
+    """logits (K, S, V), gumbel (S, V) f32 (ignored when temperature <= 0)
+    -> (tokens (S,) int32, mixture log-probs (S, V) f32)."""
+    K, S, V = logits.shape
+    kernel = functools.partial(
+        _bma_select_kernel,
+        mode=mode, temperature=float(temperature), top_k=int(top_k),
+    )
+    logp, tok = pl.pallas_call(
+        kernel,
+        grid=(S,),
+        in_specs=[
+            pl.BlockSpec((K, 1, V), lambda s: (0, s, 0)),
+            pl.BlockSpec((1, V), lambda s: (s, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, V), lambda s: (s, 0)),
+            pl.BlockSpec((1, 1), lambda s: (s, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((S, V), jnp.float32),
+            jax.ShapeDtypeStruct((S, 1), jnp.int32),
+        ],
+        compiler_params=_CompilerParams(dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(logits, gumbel)
+    return tok[:, 0], logp

@@ -9,8 +9,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import bma_select as _bs
 from . import flash_attention as _fa
 from . import fused_ecsghmc as _fe
+from . import paged_attention as _pa
 from . import rglru as _rg
 
 
@@ -153,6 +155,51 @@ def flash_attention(q, k, v, *, causal=True, window=None, softcap=None, scale=No
         block_q=block_q, block_k=block_k, interpret=not _on_tpu(),
     )
     return out[..., :d] if pad_d else out
+
+
+# --- paged attention (decode) ------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "window", "softcap"))
+def paged_attention(q, k_pages, v_pages, block_tables, context_lens,
+                    *, scale=None, window=None, softcap=None):
+    """q (B, Hkv, G, d) vs paged pool (num_pages, bs, Hkv, d) through
+    (B, M) block tables -> (B, Hkv, G, d).  Pads d to 128 (softmax scale
+    keeps the ORIGINAL head dim); context_lens is the inclusive current
+    position."""
+    d = q.shape[-1]
+    pad_d = (-d) % 128
+    if pad_d:
+        scale = scale if scale is not None else 1.0 / np.sqrt(d)
+        pad = lambda x: jnp.pad(x, ((0, 0),) * (x.ndim - 1) + ((0, pad_d),))
+        q, k_pages, v_pages = pad(q), pad(k_pages), pad(v_pages)
+    out = _pa.paged_attention(
+        q, k_pages, v_pages,
+        block_tables.astype(jnp.int32), context_lens.astype(jnp.int32),
+        scale=scale, window=window, softcap=softcap, interpret=not _on_tpu(),
+    )
+    return out[..., :d] if pad_d else out
+
+
+# --- fused BMA mixture + selection -------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "temperature", "top_k"))
+def fused_bma_select(logits, key, *, mode="probs", temperature=0.0, top_k=0):
+    """(K, S, V) member logits -> (tokens (S,) int32, mixture logp (S, V)
+    f32) in one memory pass.  The Gumbel draw happens OUT here with the
+    caller's key so sampled tokens are bit-identical to
+    ``jax.random.categorical(key, logp/T)`` on the unfused path."""
+    K, S, V = logits.shape
+    if temperature > 0.0:
+        gumbel = jax.random.gumbel(key, (S, V), jnp.float32)
+    else:
+        gumbel = jnp.zeros((S, V), jnp.float32)
+    return _bs.bma_select(
+        logits, gumbel,
+        mode=mode, temperature=temperature, top_k=top_k,
+        interpret=not _on_tpu(),
+    )
 
 
 # --- RG-LRU scan -------------------------------------------------------------

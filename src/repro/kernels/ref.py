@@ -66,6 +66,62 @@ def attention(q, k, v, *, causal=True, window=None, softcap=None, scale=None):
     return out.reshape(B, Hq, S, d)
 
 
+# --- paged attention (single-token decode) -----------------------------------
+
+
+def gather_pages(pages, block_tables):
+    """(num_pages, bs, Hkv, d) pool + (B, M) int32 tables -> the dense
+    per-sequence cache (B, M*bs, Hkv, d) a slot-resident engine would hold."""
+    B, M = block_tables.shape
+    _, bs, Hkv, d = pages.shape
+    return pages[block_tables].reshape(B, M * bs, Hkv, d)
+
+
+def paged_attention(
+    q, k_pages, v_pages, block_tables, context_lens,
+    *, scale=None, window=None, softcap=None,
+):
+    """Dense full-materialization reference for the paged decode kernel:
+    gather every page into a contiguous cache, then masked softmax in f32.
+    q: (B, Hkv, G, d); context_lens (B,) is the INCLUSIVE current position
+    (the query's own kpos).  Returns (B, Hkv, G, d)."""
+    B, Hkv, G, d = q.shape
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    k = gather_pages(k_pages, block_tables).astype(jnp.float32)  # (B, T, Hkv, d)
+    v = gather_pages(v_pages, block_tables).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bthd->bhgt", q.astype(jnp.float32) * scale, k)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    kpos = jnp.arange(k.shape[1])[None, :]  # (1, T)
+    ctx = context_lens[:, None]
+    mask = kpos <= ctx
+    if window is not None:
+        mask &= (ctx - kpos) < window
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgt,bthd->bhgd", w, v).astype(q.dtype)
+
+
+# --- fused BMA mixture + selection -------------------------------------------
+
+
+def bma_select(logits, gumbel, *, mode, temperature, top_k):
+    """Unfused oracle for kernels.bma_select: mixture via the serving-tier
+    helper, selection via argmax over (scaled, top-k-masked) + Gumbel —
+    exactly what jax.random.categorical computes given the same draw."""
+    from repro.serve.engine.bma import mixture_logprobs
+    from repro.serve.sampling import _top_k_mask
+
+    logp = mixture_logprobs(logits, mode)  # (S, V) f32
+    if temperature <= 0.0:
+        return jnp.argmax(logp, axis=-1).astype(jnp.int32), logp
+    sel = logp / jnp.float32(temperature)
+    if top_k:
+        sel = _top_k_mask(sel, top_k)
+    tok = jnp.argmax(sel + gumbel.astype(jnp.float32), axis=-1).astype(jnp.int32)
+    return tok, logp
+
+
 # --- RG-LRU scan -------------------------------------------------------------
 
 

@@ -221,6 +221,66 @@ def decode_attention(cfg: ModelConfig, p, x, cache, t, window: Optional[int]):
     return out, {"k": new_k, "v": new_v}
 
 
+def paged_decode_attention(cfg: ModelConfig, p, x, pool, block_tables, context_lens, write_block):
+    """Single-token decode against a block-paged KV pool (DESIGN.md §8).
+
+    x: (S, 1, D) — every engine slot jointly (the pool is shared, so slots
+    cannot be vmapped the way dense slot caches are).  pool: {"k","v"} of
+    (num_pages, bs, Hkv, dh); block_tables (S, M) int32; context_lens (S,)
+    int32 current positions; write_block (S,) int32 destination page for
+    this step's k/v (page 0 is the sink — done/free slots write there and
+    nothing ever reads it).  Returns (out (S, 1, D), new pool).
+
+    Numerics mirror :func:`decode_attention` exactly — einsums in
+    ``compute_dtype``, softcap/softmax in f32, -1e30 masking — so paged vs
+    dense equivalence holds at f32-roundoff tolerance."""
+    cd = cfg.compute_dtype
+    S = x.shape[0]
+    pos = context_lens[:, None].astype(jnp.int32)  # (S, 1)
+    q, k, v = _qk(cfg, p, x, pos)  # q (S,1,Hkv,G,dh), k/v (S,1,Hkv,dh)
+    bs = pool["k"].shape[1]
+    off = (context_lens % bs).astype(jnp.int32)
+    new_k = pool["k"].at[write_block, off].set(k[:, 0].astype(pool["k"].dtype))
+    new_v = pool["v"].at[write_block, off].set(v[:, 0].astype(pool["v"].dtype))
+    window = None  # paged pools are non-windowed (guarded at pool creation)
+    if cfg.use_flash_kernel and cfg.mrope_sections is None:
+        from repro.kernels.ops import paged_attention as _paged
+
+        out = _paged(
+            q[:, 0], new_k, new_v, block_tables, context_lens,
+            scale=_scale(cfg), window=window, softcap=cfg.attn_logit_softcap,
+        )[:, None]  # (S, 1, Hkv, G, dh)
+    else:
+        M = block_tables.shape[1]
+        kd = new_k[block_tables].reshape(S, M * bs, cfg.num_kv_heads, cfg.head_dim)
+        vd = new_v[block_tables].reshape(S, M * bs, cfg.num_kv_heads, cfg.head_dim)
+        kpos = jnp.arange(M * bs)[None, :]
+        valid = kpos <= context_lens[:, None]
+        s = jnp.einsum("bqhgk,bthk->bhgqt", q.astype(cd), kd.astype(cd)) * _scale(cfg)
+        s = _softcap(s.astype(jnp.float32), cfg.attn_logit_softcap)
+        s = jnp.where(valid[:, None, None, None, :], s, -1e30)
+        w = jax.nn.softmax(s, axis=-1).astype(cd)
+        out = jnp.einsum("bhgqt,bthk->bqhgk", w, vd.astype(cd))
+    out = out.reshape(S, 1, cfg.num_heads, cfg.head_dim)
+    out = jnp.einsum("bshk,hkd->bsd", out.astype(cd), p["wo"].astype(cd))
+    return out, {"k": new_k, "v": new_v}
+
+
+def init_page_pool(cfg: ModelConfig, num_pages: int, block_size: int, dtype):
+    """Paged KV pool for one attention layer: a flat page array shared by
+    every sequence, indexed through per-sequence block tables."""
+    shape = (num_pages, block_size, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def page_pool_specs(cfg: ModelConfig, num_pages: int, block_size: int, dtype):
+    shape = (num_pages, block_size, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "k": jax.ShapeDtypeStruct(shape, dtype),
+        "v": jax.ShapeDtypeStruct(shape, dtype),
+    }
+
+
 # ---------------------------------------------------------------------------
 # MLP
 # ---------------------------------------------------------------------------

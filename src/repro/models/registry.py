@@ -7,6 +7,15 @@ from . import encdec, transformer
 from .common import ModelConfig
 
 
+class PagedDef(NamedTuple):
+    """Optional paged-KV decode surface (DESIGN.md §8); attn-only models."""
+
+    check_support: Callable  # (cfg) -> None or raises ValueError
+    make_pools: Callable  # (cfg, num_pages, block_size, dtype, abstract) -> pools
+    prefill_write: Callable  # (cfg, pools, slot_cache, table_row, block_size) -> pools
+    decode_step: Callable  # (cfg, params, pools, tokens, tables, ctx, write_block) -> (logits, pools)
+
+
 class ModelDef(NamedTuple):
     param_specs: Callable  # (cfg) -> spec tree
     train_nll: Callable  # (cfg, params, batch) -> (sum_nll, count)
@@ -14,6 +23,7 @@ class ModelDef(NamedTuple):
     decode_step: Callable  # (cfg, params, cache, tokens) -> (logits, cache)
     make_cache: Callable  # (cfg, batch, max_seq, dtype, abstract) -> cache
     cache_axes: Callable  # (cfg) -> logical-axis tree matching make_cache
+    paged: PagedDef | None = None  # block-paged decode; None => dense-only
 
 
 _LM = ModelDef(
@@ -23,6 +33,12 @@ _LM = ModelDef(
     decode_step=transformer.decode_step,
     make_cache=transformer.make_cache,
     cache_axes=transformer.cache_axes,
+    paged=PagedDef(
+        check_support=transformer.check_paged_support,
+        make_pools=transformer.make_paged_pools,
+        prefill_write=transformer.paged_prefill_write,
+        decode_step=transformer.paged_decode_step,
+    ),
 )
 
 _ENCDEC = ModelDef(

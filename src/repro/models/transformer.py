@@ -403,6 +403,152 @@ def _slstm_with_state(cfg, p, x):
     return R._slstm_out(cfg, p, hs), state
 
 
+# ---------------------------------------------------------------------------
+# Paged decode (block-paged KV pools; DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+def check_paged_support(cfg: ModelConfig) -> None:
+    """Paged pools hold absolute-position pages, so every layer must be
+    non-windowed attention (windowed dense caches are ring buffers whose
+    slot->position map does not survive the page indirection) and RoPE must
+    be single-stream."""
+    for kind in cfg.layer_kinds:
+        if kind.kind != "attn":
+            raise ValueError(f"paged decode supports attn-only models, got {kind.kind!r}")
+        if kind.window:
+            raise ValueError("paged decode does not support sliding-window layers")
+    if cfg.mrope_sections is not None:
+        raise ValueError("paged decode does not support M-RoPE position streams")
+
+
+def make_paged_pools(cfg: ModelConfig, num_pages: int, block_size: int, dtype,
+                     abstract: bool = False):
+    """Flat page pools mirroring the make_cache layer structure: leaves
+    (n_periods, num_pages, bs, Hkv, dh) for pattern layers (page 0 is the
+    reserved sink).  No "t" leaf — positions live in the engine's per-slot
+    context lengths."""
+    check_paged_support(cfg)
+    P, n_periods, rem_kinds = _layout(cfg)
+    fn = L.page_pool_specs if abstract else L.init_page_pool
+    pools = {
+        "layers": {
+            str(i): _stack_cache(
+                {"attn": fn(cfg, num_pages, block_size, dtype)}, n_periods, abstract
+            )
+            for i in range(P)
+        }
+    }
+    if rem_kinds:
+        pools["rem"] = {
+            str(i): {"attn": fn(cfg, num_pages, block_size, dtype)}
+            for i in range(len(rem_kinds))
+        }
+    return pools
+
+
+def _scatter_pages(pool_leaf, cache_leaf, table_row, block_size, stacked):
+    """Write one slot's dense prefill cache (.., 1, L, Hkv, dh) into its
+    table row's pages.  L is ceil-padded to M*bs; overflow blocks land in
+    whatever table_row maps them to — the sink for unallocated tails."""
+    M = table_row.shape[0]
+    c = cache_leaf[:, 0] if stacked else cache_leaf[0]  # (P?, L, Hkv, dh)
+    seq_ax = 1 if stacked else 0
+    pad = M * block_size - c.shape[seq_ax]
+    if pad:
+        widths = [(0, 0)] * c.ndim
+        widths[seq_ax] = (0, pad)
+        c = jnp.pad(c, widths)
+    blocks = c.reshape(c.shape[:seq_ax] + (M, block_size) + c.shape[seq_ax + 1 :])
+    if stacked:
+        return pool_leaf.at[:, table_row].set(blocks.astype(pool_leaf.dtype))
+    return pool_leaf.at[table_row].set(blocks.astype(pool_leaf.dtype))
+
+
+def paged_prefill_write(cfg: ModelConfig, pools, slot_cache, table_row, block_size: int):
+    """Scatter a freshly prefilled slot cache (from :func:`prefill` with
+    batch=1) into the paged pools along ``table_row`` (M,) int32.  Shared
+    prefix pages are rewritten with bit-identical content (KV at position p
+    depends only on (token_p, p)), so refcounted sharing stays exact."""
+    P, n_periods, rem_kinds = _layout(cfg)
+    out = {"layers": {}}
+    for i in range(P):
+        out["layers"][str(i)] = {
+            "attn": {
+                kk: _scatter_pages(
+                    pools["layers"][str(i)]["attn"][kk],
+                    slot_cache["layers"][str(i)]["attn"][kk],
+                    table_row, block_size, stacked=True,
+                )
+                for kk in ("k", "v")
+            }
+        }
+    if rem_kinds:
+        out["rem"] = {
+            str(i): {
+                "attn": {
+                    kk: _scatter_pages(
+                        pools["rem"][str(i)]["attn"][kk],
+                        slot_cache["rem"][str(i)]["attn"][kk],
+                        table_row, block_size, stacked=False,
+                    )
+                    for kk in ("k", "v")
+                }
+            }
+            for i in range(len(rem_kinds))
+        }
+    return out
+
+
+def _paged_decode_block(cfg, kind, p, x, pool, block_tables, context_lens, write_block):
+    h, new_attn = L.paged_decode_attention(
+        cfg, p["attn"], _norm(cfg, x, p["ln1"]), pool["attn"],
+        block_tables, context_lens, write_block,
+    )
+    if cfg.sandwich_norm:
+        h = _norm(cfg, h, p["post_ln1"])
+    x = x + h
+    h_in = _norm(cfg, x, p["ln2"])
+    h = M.moe_ffn(cfg, p["mlp"], h_in) if kind.moe else L.mlp(cfg, p["mlp"], h_in)
+    if cfg.sandwich_norm:
+        h = _norm(cfg, h, p["post_ln2"])
+    return x + h, {"attn": new_attn}
+
+
+def paged_decode_step(cfg: ModelConfig, params, pools, tokens, block_tables,
+                      context_lens, write_block):
+    """All-slots-jointly decode: tokens (S, 1), block_tables (S, M) int32,
+    context_lens (S,) int32 current positions, write_block (S,) int32
+    destination pages.  Returns (logits (S, 1, V), new pools).  The shared
+    page pools preclude a slot vmap — the slot axis is the batch axis."""
+    x = L.embed(cfg, params["embed"], tokens)
+    P, n_periods, rem_kinds = _layout(cfg)
+
+    def period(carry, xs):
+        x = carry
+        pslice, poolslice = xs
+        new_p = {}
+        for i in range(P):
+            x, new_p[str(i)] = _paged_decode_block(
+                cfg, cfg.pattern[i], pslice[str(i)], x, poolslice[str(i)],
+                block_tables, context_lens, write_block,
+            )
+        return x, new_p
+
+    x, new_layer_pools = jax.lax.scan(period, x, (params["layers"], pools["layers"]))
+    new_pools = {"layers": new_layer_pools}
+    if rem_kinds:
+        new_pools["rem"] = {}
+        for i, kind in enumerate(rem_kinds):
+            x, new_pools["rem"][str(i)] = _paged_decode_block(
+                cfg, kind, params["rem"][str(i)], x, pools["rem"][str(i)],
+                block_tables, context_lens, write_block,
+            )
+    x = _norm(cfg, x, params["final_norm"])
+    logits = L.final_logits(cfg, params["embed"], x)
+    return logits, new_pools
+
+
 def decode_step(cfg: ModelConfig, params, cache, tokens):
     """tokens: (B, 1) -> (logits (B,1,V), new cache). One new position."""
     t = cache["t"]

@@ -1,28 +1,34 @@
-"""Posterior-predictive serving engine (DESIGN.md §5).
+"""Posterior-predictive serving engine (DESIGN.md §5, §8).
 
 Continuous batching over a fixed slot axis (one compiled decode program;
 admissions/completions are data), a recycled per-slot cache pool with
-int8-parked idle caches, Bayesian model averaging over K ensemble members,
-and live snapshot refresh from a background coupled-sampler run gated by
+int8-parked idle caches — dense stripes or a block-paged pool with
+refcounted prefix sharing (``paged=True``) — Bayesian model averaging over
+K ensemble members (optionally one fused mixture+selection kernel), and
+live snapshot refresh from a background coupled-sampler run gated by
 ensemble-spread diagnostics.
 """
-from .bma import BMA_MODES, mixture_logprobs, reference_bma_decode
-from .cache_pool import CachePool, ParkedCache
+from .bma import BMA_MODES, fused_mixture_select, mixture_logprobs, reference_bma_decode
+from .cache_pool import BlockAllocator, CachePool, PagedCachePool, PagedParked, ParkedCache
 from .engine import ServeEngine, ServeReport
 from .registry import ChainRefresher, SnapshotRegistry
 from .scheduler import FCFSQueue, Request, RequestResult, synthetic_trace
 
 __all__ = [
     "BMA_MODES",
+    "BlockAllocator",
     "CachePool",
     "ChainRefresher",
     "FCFSQueue",
+    "PagedCachePool",
+    "PagedParked",
     "ParkedCache",
     "Request",
     "RequestResult",
     "ServeEngine",
     "ServeReport",
     "SnapshotRegistry",
+    "fused_mixture_select",
     "mixture_logprobs",
     "reference_bma_decode",
     "synthetic_trace",

@@ -36,6 +36,25 @@ def mixture_logprobs(logits, mode: str = "probs"):
     return jax.nn.log_softmax(jnp.mean(lp, axis=0), axis=-1)
 
 
+def fused_mixture_select(logits, key, *, mode: str = "probs",
+                         sampling: SamplingParams = GREEDY):
+    """One-kernel mixture + selection: (K, S, V) per-member logits ->
+    (tokens (S,), mixture logprobs (S, V)).  Delegates to the Pallas
+    ``bma_select`` kernel, which reproduces ``mixture_logprobs`` +
+    ``select_tokens`` exactly — sampled selection rides the Gumbel-argmax
+    identity (see ``repro.serve.sampling.gumbel_argmax_select``) so the
+    token draw is bit-identical to ``jax.random.categorical`` with the
+    same key."""
+    from repro.kernels import fused_bma_select
+
+    if mode not in BMA_MODES:
+        raise ValueError(f"mode must be one of {BMA_MODES}, got {mode!r}")
+    return fused_bma_select(
+        logits, key, mode=mode,
+        temperature=float(sampling.temperature), top_k=int(sampling.top_k),
+    )
+
+
 def reference_bma_decode(
     cfg,
     model,

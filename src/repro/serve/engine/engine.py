@@ -21,6 +21,14 @@ emissions are masked to ``pad_id`` and their cache writes land in slots
 whose validity masks hide them from any later request (positions are
 rewritten by the next prefill before they become attendable).
 
+``paged=True`` swaps the dense per-slot stripes for the block-paged pool
+(DESIGN.md §8): same invariant, but block tables and context lengths are
+extra DATA arguments to the decode program, admission additionally gates on
+the page allocator's worst-case reservation, and done-slot writes are
+redirected in-program to the reserved sink page so recycled pages can never
+be corrupted mid-batch.  ``fused_select`` routes the mixture + selection
+through one Pallas kernel (token draws bit-identical via Gumbel-argmax).
+
 The scheduler clock, admission policy and latency accounting live in
 ``scheduler.py``; member health gating and live refresh in ``registry.py``;
 see DESIGN.md §5 for the full contract.
@@ -38,8 +46,8 @@ import numpy as np
 
 from repro.serve.sampling import GREEDY, SamplingParams, select_tokens
 
-from .bma import BMA_MODES, mixture_logprobs
-from .cache_pool import CachePool
+from .bma import BMA_MODES, fused_mixture_select, mixture_logprobs
+from .cache_pool import CachePool, PagedCachePool
 from .registry import ChainRefresher, SnapshotRegistry
 from .scheduler import FCFSQueue, Request, RequestResult
 
@@ -114,6 +122,11 @@ class ServeEngine:
         mesh=None,
         member_axis: str = "member",
         slot_axis: str = "slot",
+        paged: bool = False,
+        block_size: int = 16,
+        num_blocks: int | None = None,
+        prefix_sharing: bool = True,
+        fused_select: bool | None = None,
     ):
         if bma not in BMA_MODES:
             raise ValueError(f"bma must be one of {BMA_MODES}")
@@ -130,15 +143,37 @@ class ServeEngine:
         if refresher is not None and refresher.registry is not self.registry:
             raise ValueError("refresher must feed this engine's registry")
         self.record_logprobs = bool(record_logprobs)
-        self.pool = CachePool(
-            cfg,
-            model,
-            num_members=self.registry.num_members,
-            num_slots=num_slots,
-            max_seq=max_seq,
-            dtype=cache_dtype or cfg.compute_dtype,
-            compress_parked=compress_parked,
+        self.paged = bool(paged)
+        # Fused mixture+selection kernel: on by default where it compiles to
+        # a real kernel (TPU); the unfused jnp path stays the default on CPU
+        # so interpret-mode overhead never taxes the test/bench hot loop.
+        # Either way the numerics are pinned equal by tests/test_paged_attention.py.
+        self._fused_select = (
+            jax.default_backend() == "tpu" if fused_select is None else bool(fused_select)
         )
+        if self.paged:
+            self.pool = PagedCachePool(
+                cfg,
+                model,
+                num_members=self.registry.num_members,
+                num_slots=num_slots,
+                max_seq=max_seq,
+                block_size=block_size,
+                num_blocks=num_blocks,
+                dtype=cache_dtype or cfg.compute_dtype,
+                compress_parked=compress_parked,
+                prefix_sharing=prefix_sharing,
+            )
+        else:
+            self.pool = CachePool(
+                cfg,
+                model,
+                num_members=self.registry.num_members,
+                num_slots=num_slots,
+                max_seq=max_seq,
+                dtype=cache_dtype or cfg.compute_dtype,
+                compress_parked=compress_parked,
+            )
         S = self.pool.num_slots
         self._tokens = jnp.full((S, 1), self.pad_id, jnp.int32)
         self._done = jnp.ones((S,), bool)
@@ -162,15 +197,23 @@ class ServeEngine:
         if mesh is None:
             # the two compiled entry points; caches are donated through both
             # so the pool's buffers are recycled in place, never copied
-            self._decode = jax.jit(self._decode_fn, donate_argnums=(1,))
-            self._admit = jax.jit(self._admit_fn, donate_argnums=(1,))
+            if self.paged:
+                self._decode = jax.jit(self._decode_paged_fn, donate_argnums=(1,))
+                self._admit = jax.jit(self._admit_paged_fn, donate_argnums=(1,))
+            else:
+                self._decode = jax.jit(self._decode_fn, donate_argnums=(1,))
+                self._admit = jax.jit(self._admit_fn, donate_argnums=(1,))
         else:
             from jax.sharding import NamedSharding, PartitionSpec
 
             from repro.distributed.sharding import leading_axes_shardings
 
             rep = NamedSharding(mesh, PartitionSpec())
-            cache_s = leading_axes_shardings(self.pool.caches, (member_axis, slot_axis), mesh)
+            # Paged pools have no slot axis — pages are shared across slots —
+            # so they shard over members only and the page pool replicates
+            # along the slot mesh axis.  Dense pools shard (member, slot).
+            cache_axes = (member_axis,) if self.paged else (member_axis, slot_axis)
+            cache_s = leading_axes_shardings(self.pool.caches, cache_axes, mesh)
             mem_s = leading_axes_shardings(self.registry.members, (member_axis,), mesh)
             tok_s = leading_axes_shardings(self._tokens, (slot_axis,), mesh)
             slot_s = leading_axes_shardings(self._done, (slot_axis,), mesh)
@@ -179,20 +222,39 @@ class ServeEngine:
             self._tokens = jax.device_put(self._tokens, tok_s)
             self._done = jax.device_put(self._done, slot_s)
             self._budget = jax.device_put(self._budget, slot_s)
-            self._decode = jax.jit(
-                self._decode_fn,
-                donate_argnums=(1,),
-                in_shardings=(mem_s, cache_s, tok_s, slot_s, slot_s, rep),
-                # (emit, feed, caches, done, budget, logp) — logp is (S, V),
-                # slot-leading like the masks
-                out_shardings=(slot_s, tok_s, cache_s, slot_s, slot_s, slot_s),
-            )
-            self._admit = jax.jit(
-                self._admit_fn,
-                donate_argnums=(1,),
-                in_shardings=(mem_s, cache_s, tok_s, slot_s, slot_s, rep, rep, rep, rep),
-                out_shardings=(cache_s, tok_s, slot_s, slot_s, rep, rep, rep),
-            )
+            if self.paged:
+                tab_s = leading_axes_shardings(
+                    jnp.zeros((S, self.pool.alloc.blocks_per_slot), jnp.int32),
+                    (slot_axis,),
+                    mesh,
+                )
+                self._decode = jax.jit(
+                    self._decode_paged_fn,
+                    donate_argnums=(1,),
+                    in_shardings=(mem_s, cache_s, tok_s, slot_s, slot_s, tab_s, slot_s, rep),
+                    out_shardings=(slot_s, tok_s, cache_s, slot_s, slot_s, slot_s),
+                )
+                self._admit = jax.jit(
+                    self._admit_paged_fn,
+                    donate_argnums=(1,),
+                    in_shardings=(mem_s, cache_s, tok_s, slot_s, slot_s, rep, rep, rep, rep, rep),
+                    out_shardings=(cache_s, tok_s, slot_s, slot_s, rep, rep, rep),
+                )
+            else:
+                self._decode = jax.jit(
+                    self._decode_fn,
+                    donate_argnums=(1,),
+                    in_shardings=(mem_s, cache_s, tok_s, slot_s, slot_s, rep),
+                    # (emit, feed, caches, done, budget, logp) — logp is (S, V),
+                    # slot-leading like the masks
+                    out_shardings=(slot_s, tok_s, cache_s, slot_s, slot_s, slot_s),
+                )
+                self._admit = jax.jit(
+                    self._admit_fn,
+                    donate_argnums=(1,),
+                    in_shardings=(mem_s, cache_s, tok_s, slot_s, slot_s, rep, rep, rep, rep),
+                    out_shardings=(cache_s, tok_s, slot_s, slot_s, rep, rep, rep),
+                )
 
     # -- compiled programs --------------------------------------------------
 
@@ -219,6 +281,24 @@ class ServeEngine:
             return jnp.zeros(tok.shape, bool)
         return tok == self.eos_id
 
+    def _mix_select(self, logits, key):
+        """Per-tick BMA mixture + token selection over the slot axis:
+        (K, S, V) member logits -> (tokens (S,), mixture logprobs (S, V)).
+        Fused (one Pallas kernel) or unfused — same numerics, pinned by
+        tests/test_paged_attention.py."""
+        if self._fused_select:
+            return fused_mixture_select(logits, key, mode=self.bma, sampling=self.sampling)
+        logp = mixture_logprobs(logits, self.bma)
+        return select_tokens(logp, key, self.sampling), logp
+
+    def _select_tail(self, tok, logp, done, budget):
+        """Shared emit/feed/done bookkeeping after token selection."""
+        newly_done = (~done) & (self._eos_hits(tok) | (budget <= 1))
+        emit = jnp.where(done, jnp.int32(self.pad_id), tok)
+        next_done = done | newly_done
+        feed = jnp.where(next_done, jnp.int32(self.pad_id), tok)[:, None]
+        return emit, feed, next_done, budget - 1, logp
+
     def _decode_fn(self, members, caches, tokens, done, budget, key):
         self.trace_counts["decode"] += 1  # trace-time side effect only
 
@@ -230,13 +310,31 @@ class ServeEngine:
             return jax.vmap(slot_step)(c, tokens)
 
         logits, new_caches = jax.vmap(member_step)(members, caches)  # (K, S, V)
-        logp = mixture_logprobs(logits, self.bma)  # (S, V)
-        tok = select_tokens(logp, key, self.sampling)  # (S,)
-        newly_done = (~done) & (self._eos_hits(tok) | (budget <= 1))
-        emit = jnp.where(done, jnp.int32(self.pad_id), tok)
-        next_done = done | newly_done
-        feed = jnp.where(next_done, jnp.int32(self.pad_id), tok)[:, None]
-        return emit, feed, new_caches, next_done, budget - 1, logp
+        tok, logp = self._mix_select(logits, key)
+        emit, feed, next_done, budget, logp = self._select_tail(tok, logp, done, budget)
+        return emit, feed, new_caches, next_done, budget, logp
+
+    def _decode_paged_fn(self, members, pools, tokens, done, budget, tables, ctx, key):
+        """Paged twin of :meth:`_decode_fn`.  Block tables (S, M) and context
+        lengths (S,) are DATA — page churn never retraces.  The destination
+        page for each slot's write is computed in-program, with done/free
+        slots redirected to the sink page 0 so their garbage writes can never
+        land in a page that was recycled to another request mid-batch."""
+        self.trace_counts["decode"] += 1
+
+        S, M = tables.shape
+        j = jnp.clip(ctx // self.pool.block_size, 0, M - 1)
+        write_block = jnp.where(done, 0, tables[jnp.arange(S), j])  # (S,)
+
+        def member_step(p, pool):
+            return self.model.paged.decode_step(
+                self.cfg, p, pool, tokens, tables, ctx, write_block
+            )
+
+        logits, new_pools = jax.vmap(member_step)(members, pools)  # (K, S, 1, V)
+        tok, logp = self._mix_select(logits[:, :, 0], key)
+        emit, feed, next_done, budget, logp = self._select_tail(tok, logp, done, budget)
+        return emit, feed, new_pools, next_done, budget, logp
 
     def _admit_fn(self, members, caches, tokens, done, budget, prompt, slot, max_new, key):
         self.trace_counts[f"admit_len{prompt.shape[-1]}"] += 1
@@ -263,6 +361,33 @@ class ServeEngine:
         budget = budget.at[slot].set(max_new - 1)
         return new_caches, tokens, done, budget, tok, slot_done, logp
 
+    def _admit_paged_fn(self, members, pools, tokens, done, budget, prompt,
+                        table_row, slot, max_new, key):
+        """Paged twin of :meth:`_admit_fn`: dense prefill (length-shaped,
+        same bucketing caveat) scattered into the slot's table-row pages.
+        Shared prefix pages get rewritten with bit-identical KV (position-
+        local), so concurrent sharers are unaffected."""
+        self.trace_counts[f"admit_len{prompt.shape[-1]}"] += 1
+
+        def member_prefill(p, pool):
+            logits, slot_cache = self.model.prefill(
+                self.cfg, p, {"tokens": prompt}, self.max_seq, self.cache_dtype
+            )
+            new_pool = self.model.paged.prefill_write(
+                self.cfg, pool, slot_cache, table_row, self.pool.block_size
+            )
+            return logits, new_pool
+
+        logits, new_pools = jax.vmap(member_prefill)(members, pools)  # (K,1,1,V)
+        logp = mixture_logprobs(logits[:, 0, -1], self.bma)  # (V,)
+        tok = select_tokens(logp, key, self.sampling)  # scalar
+        slot_done = self._eos_hits(tok) | (max_new <= 1)
+        feed = jnp.where(slot_done, jnp.int32(self.pad_id), tok)
+        tokens = tokens.at[slot, 0].set(feed)
+        done = done.at[slot].set(slot_done)
+        budget = budget.at[slot].set(max_new - 1)
+        return new_pools, tokens, done, budget, tok, slot_done, logp
+
     # -- serving loop -------------------------------------------------------
 
     def _finalize(self, slot, act: _Active, step: int, now: float, results: list):
@@ -288,17 +413,34 @@ class ServeEngine:
         slot = self.pool.acquire()
         key = jax.random.fold_in(self._key_admit, req.rid)
         prompt = jnp.asarray(req.prompt)[None]
-        out = self._admit(
-            self._members(),
-            self.pool.caches,
-            self._tokens,
-            self._done,
-            self._budget,
-            prompt,
-            jnp.int32(slot),
-            jnp.int32(req.max_new),
-            key,
-        )
+        if self.paged:
+            table_row = self.pool.admit_blocks(
+                slot, req.prompt, req.max_new, self.registry.version
+            )
+            out = self._admit(
+                self._members(),
+                self.pool.caches,
+                self._tokens,
+                self._done,
+                self._budget,
+                prompt,
+                jnp.asarray(table_row),
+                jnp.int32(slot),
+                jnp.int32(req.max_new),
+                key,
+            )
+        else:
+            out = self._admit(
+                self._members(),
+                self.pool.caches,
+                self._tokens,
+                self._done,
+                self._budget,
+                prompt,
+                jnp.int32(slot),
+                jnp.int32(req.max_new),
+                key,
+            )
         self.pool.caches, self._tokens, self._done, self._budget, tok, slot_done, logp = out
         now = wall()
         res = RequestResult(rid=req.rid, prompt_len=int(req.prompt.size), admitted_step=step)
@@ -338,9 +480,23 @@ class ServeEngine:
             for r in queue.visible(step):
                 submit_s.setdefault(r.rid, wall())  # schedulable => clock starts
             while self.pool.free_slots:
-                req = queue.admissible(step)
+                req = queue.peek(step)
                 if req is None:
                     break
+                if not self.pool.can_admit(req.prompt, req.max_new, self.registry.version):
+                    # FCFS head-of-line: not enough free pages for this
+                    # request's worst-case growth — wait for completions to
+                    # free pages.  If nothing is in flight no pages will
+                    # ever free, so an empty-pool refusal is permanent.
+                    if not active and self.pool.active_slots == 0:
+                        raise ValueError(
+                            f"request {req.rid}: prompt_len + max_new = "
+                            f"{int(req.prompt.size) + req.max_new} can never fit the "
+                            f"page pool (free={self.pool.alloc.free_blocks} blocks "
+                            f"of {self.pool.block_size})"
+                        )
+                    break
+                queue.pop()
                 self._do_admit(req, step, submit_s[req.rid], active, results, wall)
             if (
                 self.refresher is not None
@@ -351,14 +507,37 @@ class ServeEngine:
                 last_refresh = step
             if active:
                 key = jax.random.fold_in(self._key_decode, step)
-                emit, feed, caches, done, budget, logp = self._decode(
-                    self._members(),
-                    self.pool.caches,
-                    self._tokens,
-                    self._done,
-                    self._budget,
-                    key,
-                )
+                if self.paged:
+                    # Host-side growth first: make sure every live slot owns
+                    # the page its fed token writes into, then ship the
+                    # tables/positions as data.
+                    for slot in active:
+                        self.pool.ensure_decode_block(slot)
+                    emit, feed, caches, done, budget, logp = self._decode(
+                        self._members(),
+                        self.pool.caches,
+                        self._tokens,
+                        self._done,
+                        self._budget,
+                        # jnp.array COPIES (asarray may zero-copy alias the
+                        # allocator's live numpy buffers, which mutate under
+                        # the async dispatch — advance()/ensure_decode_block
+                        # run before the tick's compute necessarily does)
+                        jnp.array(self.pool.tables),
+                        jnp.array(self.pool.ctx),
+                        key,
+                    )
+                    for slot in active:  # fed token consumed position ctx
+                        self.pool.advance(slot)
+                else:
+                    emit, feed, caches, done, budget, logp = self._decode(
+                        self._members(),
+                        self.pool.caches,
+                        self._tokens,
+                        self._done,
+                        self._budget,
+                        key,
+                    )
                 self.pool.caches = caches
                 self._tokens, self._done, self._budget = feed, done, budget
                 self.decode_steps += 1

@@ -79,6 +79,19 @@ class FCFSQueue:
             return self._q.popleft()
         return None
 
+    def peek(self, step: int):
+        """Head-of-line request visible at ``step`` WITHOUT popping — the
+        paged engine inspects it against the block pool's ``can_admit``
+        before committing (FCFS means a head that does not fit blocks the
+        line; it is admitted once completions free enough pages)."""
+        if self._q and self._q[0].arrival_step <= step:
+            return self._q[0]
+        return None
+
+    def pop(self):
+        """Pop the head unconditionally (pairs with a prior ``peek``)."""
+        return self._q.popleft()
+
 
 def synthetic_trace(
     num_requests: int,
@@ -88,19 +101,34 @@ def synthetic_trace(
     max_new: int = 16,
     mean_interarrival: float = 2.0,
     seed: int = 0,
+    prompt_pool: int = 0,
 ) -> list:
     """Poisson open-loop request trace: exponential inter-arrival times
     (mean ``mean_interarrival`` decode steps — the offered-load knob)
     accumulated in continuous time and floored onto the tick clock, so
     sub-tick means (< 1) genuinely produce multiple arrivals per tick.
-    Prompt lengths cycle through ``prompt_lens``; token ids are random."""
+    Prompt lengths cycle through ``prompt_lens``; token ids are random.
+
+    ``prompt_pool > 0`` draws prompts from a fixed pool of that many
+    distinct prompts instead of fresh ones per request — the knob that
+    exercises (and benchmarks) paged prefix sharing: a pool of P prompts
+    gives an expected steady-state prefix hit rate of 1 - P/num_requests."""
     if mean_interarrival <= 0:
         raise ValueError("mean_interarrival must be > 0")
     rng = np.random.default_rng(seed)
+    pool = [
+        rng.integers(
+            0, vocab_size, size=int(prompt_lens[i % len(prompt_lens)])
+        ).astype(np.int32)
+        for i in range(prompt_pool)
+    ]
     reqs, t = [], 0.0
     for rid in range(num_requests):
-        L = int(prompt_lens[rid % len(prompt_lens)])
-        prompt = rng.integers(0, vocab_size, size=L).astype(np.int32)
+        if pool:
+            prompt = pool[rid % len(pool)]
+        else:
+            L = int(prompt_lens[rid % len(prompt_lens)])
+            prompt = rng.integers(0, vocab_size, size=L).astype(np.int32)
         reqs.append(Request(rid=rid, prompt=prompt, max_new=max_new, arrival_step=int(t)))
         t += rng.exponential(mean_interarrival)
     return reqs

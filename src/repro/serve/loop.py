@@ -120,6 +120,15 @@ def generate(
     select tokens through the shared helper (greedy by default)."""
     if sampling.temperature > 0 and key is None:
         raise ValueError("temperature > 0 sampling needs key=")
+    prompt_len = int(batch["tokens"].shape[-1])
+    if prompt_len + num_tokens > max_seq:
+        # the cache write clamps at max_seq-1 (dynamic_update_slice
+        # semantics), which would silently overwrite the last position
+        # instead of failing — same guard as ServeEngine admission
+        raise ValueError(
+            f"prompt_len + num_tokens = {prompt_len + num_tokens} exceeds "
+            f"max_seq={max_seq}"
+        )
     prefill = jax.jit(make_prefill_step(cfg, model, max_seq, sampling=sampling))
     step = jax.jit(make_decode_step(cfg, model, sampling=sampling))
     step_key = lambda i: None if key is None else jax.random.fold_in(key, i)

@@ -54,6 +54,25 @@ def select_tokens(logits, key=None, sampling: SamplingParams = GREEDY):
     return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
 
 
+def gumbel_argmax_select(logits, gumbel, sampling: SamplingParams = GREEDY):
+    """Selection with the Gumbel noise drawn OUTSIDE: tokens (...,) int32.
+
+    ``jax.random.categorical(key, x)`` is literally
+    ``argmax(x + jax.random.gumbel(key, x.shape, x.dtype))`` — the
+    Gumbel-argmax identity, which jax implements verbatim.  Splitting the
+    draw from the argmax is what lets the fused Pallas selection kernel
+    (``repro.kernels.bma_select``) match :func:`select_tokens` bit-for-bit:
+    the caller draws ``gumbel = jax.random.gumbel(key, shape, f32)`` with
+    the engine's key and the kernel only does mixture + mask + argmax.
+    ``temperature == 0`` ignores ``gumbel`` (greedy)."""
+    if sampling.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits.astype(jnp.float32) / float(sampling.temperature)
+    if sampling.top_k:
+        scaled = _top_k_mask(scaled, sampling.top_k)
+    return jnp.argmax(scaled + gumbel, axis=-1).astype(jnp.int32)
+
+
 def mask_after_eos(tokens, eos_id: int, pad_id: int = 0):
     """Replace every token strictly after the first ``eos_id`` per row with
     ``pad_id`` (the EOS itself is kept).  tokens: (B, T) int."""

@@ -189,6 +189,27 @@ class TestFlashAttention:
         np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=3e-4, atol=3e-4)
 
 
+class TestPagedAttention:
+    """Paged decode kernel vs the gather-everything dense reference (the
+    deep grid lives in tests/test_paged_attention.py; this pins the kernel
+    next to its flash sibling over the contract block sizes)."""
+
+    @pytest.mark.parametrize("bs", [8, 16, 64])
+    def test_matches_dense_reference(self, bs):
+        from repro.kernels import paged_attention
+
+        B, Hkv, G, d, M = 3, 2, 2, 64, 3
+        keys = jax.random.split(jax.random.PRNGKey(bs), 4)
+        q = jax.random.normal(keys[0], (B, Hkv, G, d), jnp.float32)
+        k = jax.random.normal(keys[1], (B * M + 1, bs, Hkv, d), jnp.float32)
+        v = jax.random.normal(keys[2], (B * M + 1, bs, Hkv, d), jnp.float32)
+        tables = (1 + jnp.arange(B * M, dtype=jnp.int32)).reshape(B, M)
+        ctx = jax.random.randint(keys[3], (B,), 0, M * bs)  # ragged
+        out = paged_attention(q, k, v, tables, ctx, window=bs + 3, softcap=30.0)
+        want = ref.paged_attention(q, k, v, tables, ctx, window=bs + 3, softcap=30.0)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-6)
+
+
 class TestRGLRU:
     @pytest.mark.parametrize("B,S,R,bs", [(2, 64, 128, 32), (1, 256, 256, 64), (3, 128, 96, 128)])
     def test_matches_reference(self, B, S, R, bs):

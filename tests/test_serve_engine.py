@@ -241,13 +241,17 @@ class TestServeEngine:
                 res.logprobs, np.asarray(ref_lp)[:, 0], atol=1e-5
             )
 
-    def test_single_decode_program(self):
+    @pytest.mark.parametrize("paged", [False, True], ids=["dense", "paged"])
+    def test_single_decode_program(self, paged):
         """Mid-decode admissions + member swap + slot recycling never
-        retrace: exactly ONE compiled decode program for the whole trace."""
+        retrace: exactly ONE compiled decode program for the whole trace.
+        The paged variant adds block-table churn (page alloc/free, decode
+        growth) — all of it data, none of it shape."""
         cfg = tiny_cfg()
         model = get_model(cfg)
         stack = member_stack(cfg, model, 2)
-        engine = ServeEngine(cfg, model, stack, num_slots=2, max_seq=24)
+        engine = ServeEngine(cfg, model, stack, num_slots=2, max_seq=24,
+                             paged=paged, block_size=8)
         reqs = synthetic_trace(
             6, vocab_size=cfg.vocab_size, prompt_lens=(5,), max_new=5,
             mean_interarrival=1.5, seed=4,
@@ -318,6 +322,20 @@ class TestServeEngine:
         bad = [Request(rid=0, prompt=np.arange(5, dtype=np.int32), max_new=4)]
         with pytest.raises(ValueError, match="max_seq"):
             engine.run(bad)
+
+    def test_generate_refuses_cache_overflow(self):
+        """Same guard on the host loop: dynamic_update_slice clamps the
+        write index at max_seq-1, so an oversized budget would silently
+        corrupt the tail instead of failing loudly."""
+        cfg = tiny_cfg()
+        model = get_model(cfg)
+        params = init_params(model.param_specs(cfg), jax.random.PRNGKey(0))
+        batch = {"tokens": jnp.arange(1, 7, dtype=jnp.int32)[None]}
+        with pytest.raises(ValueError, match="max_seq"):
+            generate(cfg, model, params, batch, max_seq=8, num_tokens=4)
+        # the boundary case still runs: 6 + 2 == 8
+        out = generate(cfg, model, params, batch, max_seq=8, num_tokens=2)
+        assert out.shape == (1, 2)
 
     def test_max_steps_truncation_recycles_slots(self):
         model = stub_model()
