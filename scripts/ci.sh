@@ -36,7 +36,7 @@ REPRO_MULTIDEVICE_CHILD=1 JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}" \
 if [[ "${SKIP_BENCH:-0}" != "1" ]]; then
   echo "== bench smoke: overhead (writes BENCH_overhead.json) =="
   REPRO_BENCH_QUICK=1 python -m benchmarks.run --bench overhead
-  echo "== bench smoke: serve engine (tiny model, few slots/tokens; writes BENCH_serve.json) =="
+  echo "== bench smoke: serve engine incl. refresh-SLO row (overlapped vs frozen p99; writes BENCH_serve.json) =="
   REPRO_BENCH_QUICK=1 python -m benchmarks.run serve
   echo "== bench smoke: adaptive tier (preconditioned vs plain ESS/sec; writes BENCH_adaptive.json) =="
   REPRO_BENCH_QUICK=1 python -m benchmarks.run adaptive

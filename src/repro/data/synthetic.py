@@ -5,7 +5,7 @@ paper's datasets: a fixed random teacher network defines p(y|x); inputs are
 class-conditioned Gaussian mixtures.  Everything is deterministic in the
 seed, so experiments are exactly reproducible.  The paper's measurements
 (posterior NLL vs. steps, comparing parallelization schemes on the SAME
-target) are preserved under this substitution (DESIGN.md §9).
+target) are preserved under this substitution (DESIGN.md §10).
 """
 from __future__ import annotations
 

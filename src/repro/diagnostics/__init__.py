@@ -52,6 +52,7 @@ from .spread import (
     chain_center_rms,
     cross_chain_spread,
     ensemble_spread,
+    ensemble_spread_device,
     pooled_moments,
 )
 from .streaming import (
@@ -93,6 +94,7 @@ __all__ = [
     "chain_center_rms",
     "cross_chain_spread",
     "ensemble_spread",
+    "ensemble_spread_device",
     "pooled_moments",
     "BatchMeansState",
     "batch_ess_add",

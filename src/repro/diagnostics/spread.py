@@ -33,13 +33,12 @@ def chain_center_rms(tree, center) -> jnp.ndarray:
     return jnp.sqrt(num / max(den, 1))
 
 
-def ensemble_spread(params_stack) -> dict:
-    """Serving-side ensemble health: how dispersed the K posterior samples
-    actually are (a collapsed ensemble is a silent BMA no-op).
-
-    ``rel_spread`` is scale-free: per-element cross-chain std over the RMS
-    parameter magnitude, so the same physical dispersion reports the same
-    number regardless of model size."""
+def ensemble_spread_device(params_stack) -> dict:
+    """Device-side half of :func:`ensemble_spread`: the pure-jnp reduction
+    of a (K, ...)-stacked ensemble to scalar DEVICE arrays — jit-safe, no
+    host syncs.  The serving registry's lazy promotion gate dispatches this
+    alongside the decode stream and fetches the verdict only at flip time
+    (DESIGN.md §9)."""
     leaves = jax.tree.leaves(params_stack)
     k = int(leaves[0].shape[0])
     n_per_chain = max(sum(int(l.size) for l in leaves) // max(k, 1), 1)
@@ -49,11 +48,24 @@ def ensemble_spread(params_stack) -> dict:
     )  # (K,)
     rms_param = jnp.mean(norms) / jnp.sqrt(jnp.float32(n_per_chain))
     return {
-        "num_chains": k,
-        "chain_spread": float(spread),
-        "mean_param_norm": float(jnp.mean(norms)),
-        "rel_spread": float(jnp.sqrt(spread) / jnp.maximum(rms_param, 1e-12)),
+        "chain_spread": spread,
+        "mean_param_norm": jnp.mean(norms),
+        "rel_spread": jnp.sqrt(spread) / jnp.maximum(rms_param, 1e-12),
     }
+
+
+def ensemble_spread(params_stack) -> dict:
+    """Serving-side ensemble health: how dispersed the K posterior samples
+    actually are (a collapsed ensemble is a silent BMA no-op).
+
+    ``rel_spread`` is scale-free: per-element cross-chain std over the RMS
+    parameter magnitude, so the same physical dispersion reports the same
+    number regardless of model size.  Host-syncing wrapper around
+    :func:`ensemble_spread_device`."""
+    leaves = jax.tree.leaves(params_stack)
+    out = {k: float(v) for k, v in ensemble_spread_device(params_stack).items()}
+    out["num_chains"] = int(leaves[0].shape[0])
+    return out
 
 
 def pooled_moments(trajectory) -> tuple[np.ndarray, np.ndarray]:

@@ -28,6 +28,7 @@ from repro import core
 from repro.models import get_model, init_params
 from repro.serve.engine import (
     ChainRefresher,
+    RefreshScheduler,
     ServeEngine,
     SnapshotRegistry,
     synthetic_trace,
@@ -65,14 +66,18 @@ def _bootstrap_ensemble(specs, key, num: int):
     return members, res
 
 
-def _live_refresher(specs, key, registry: SnapshotRegistry, chunk_steps: int = 16):
+def _live_refresher(specs, key, registry: SnapshotRegistry, chunk_steps: int = 16,
+                    mode: str = "overlapped"):
     """Background chain-stacked SGLD over the same bootstrap prior — the
-    live run whose chunk-boundary chain stack refreshes the registry."""
+    live run whose chunk-boundary chain stack refreshes the registry.
+    ``mode='overlapped'`` (default) builds the async ``RefreshScheduler``
+    (DESIGN.md §9); ``'sync'`` keeps the legacy inline ``ChainRefresher``."""
     center = init_params(specs, key)
     start = jax.tree.map(
         lambda x: jnp.broadcast_to(x[None], (registry.num_members,) + x.shape) + 0.0, center
     )
-    return ChainRefresher(
+    cls = RefreshScheduler if mode == "overlapped" else ChainRefresher
+    return cls(
         registry,
         core.sgld(step_size=_EPS),
         _prior_grad(center),
@@ -118,7 +123,7 @@ def _run_engine(args, cfg, model):
     registry = SnapshotRegistry(members)
     refresher = None
     if args.refresh_every and k > 1:
-        refresher = _live_refresher(specs, key, registry)
+        refresher = _live_refresher(specs, key, registry, mode=args.refresh_mode)
     max_seq = args.prompt_len + args.gen + 1
     engine = ServeEngine(
         cfg, model, registry,
@@ -148,8 +153,17 @@ def _run_engine(args, cfg, model):
         f"p99={pct['first_token_p99_s'] * 1e3:.1f}ms"
     )
     if refresher is not None:
+        rf = report.refresher
         print(f"snapshots: {report.registry['version']} promoted, {report.registry['rejected']} rejected, "
-              f"{report.refresher['steps_done']} sampler steps")
+              f"{rf['steps_done']} sampler steps")
+        if "pump_wall_s" in rf:  # overlapped scheduler observability
+            print(
+                f"overlap: {rf['micro_chunks']} micro-chunks of {rf['micro_steps']} steps "
+                f"on {rf['device'] or 'default device'}, pump {rf['pump_wall_s']:.3f}s, "
+                f"per-refresh {rf['per_refresh_wall_s'] * 1e3:.1f}ms, "
+                f"stalled {rf['decode_steps_stalled']} ticks ({rf['stall_wall_s']:.3f}s), "
+                f"deferred {rf['flips_deferred']} flips"
+            )
     return report
 
 
@@ -173,6 +187,9 @@ def main(argv=None):
     ap.add_argument("--eos", type=int, default=None)
     ap.add_argument("--refresh-every", type=int, default=0,
                     help="decode-step cadence of live snapshot refresh (0 = frozen members)")
+    ap.add_argument("--refresh-mode", choices=("overlapped", "sync"), default="overlapped",
+                    help="overlapped: async micro-chunk scheduler (decode never stalls); "
+                         "sync: legacy inline ChainRefresher")
     args = ap.parse_args(argv)
 
     cfg = configs.get_config(args.arch, smoke=args.smoke)

@@ -71,12 +71,17 @@ class ChunkSnapshot(NamedTuple):
     ``step`` is the absolute step index at the boundary; ``params``/``state``
     are defensive copies by default (the live carry is donated into the next
     chunk's program, so holding the raw reference across iterations would be
-    a use-after-donate)."""
+    a use-after-donate).  ``probe`` is a copied device scalar (the carry's
+    step counter) produced BY the chunk computation: ``probe.is_ready()``
+    answers "has this chunk retired?" without a host sync — the
+    backpressure signal the overlapped refresh scheduler paces dispatch
+    with (DESIGN.md §9)."""
 
     step: int
     params: Any
     state: Any
     outs: Any
+    probe: Any = None
 
 
 class RunResult(NamedTuple):
@@ -421,6 +426,7 @@ class ChainExecutor:
         keys=None,
         start_step: int = 0,
         copy_snapshots: bool = True,
+        snapshot_every: int = 1,
     ):
         """Chunk-boundary snapshot hook: a generator that advances the run
         one chunk at a time and yields a :class:`ChunkSnapshot` at every
@@ -433,7 +439,17 @@ class ChainExecutor:
         pass False only if each snapshot is fully consumed before ``next()``
         is called again — the live carry is donated into the next chunk.
         The generator can be abandoned at any boundary (the carry's device
-        buffers are garbage-collected with it)."""
+        buffers are garbage-collected with it).
+
+        ``snapshot_every=k`` is the MICRO-CHUNK hook (DESIGN.md §9): every
+        boundary still yields (so a caller can pace dispatch one chunk at a
+        time against another workload's clock), but params/state are copied
+        only on every k-th boundary and on the final one — intermediate
+        yields carry ``params=state=None``.  Chunking is invisible to the
+        dynamics (§3), so splitting a chunk into k micro-chunks with
+        ``key_mode='fold'`` is bit-identical to the unsplit run.  Nothing
+        in this generator forces a host sync: every chunk dispatch, copy and
+        yield rides JAX's async dispatch."""
         if self.key_mode == "keys" and keys is None:
             raise ValueError("key_mode='keys' needs keys=")
         if self.key_mode in ("fold", "carry") and key is None:
@@ -442,9 +458,11 @@ class ChainExecutor:
             raise ValueError("num_steps must be a multiple of thin when tracing")
         if self.sampler_factory is not None:
             raise ValueError("stream does not support sampler_factory mode")
+        if snapshot_every < 1:
+            raise ValueError("snapshot_every must be >= 1")
         copy = (lambda tr: jax.tree.map(lambda x: x.copy(), tr)) if copy_snapshots else (lambda tr: tr)
         carry = self._init_carry(params, state, start_step, key, sweep=False)
-        t_run, t_abs = 0, int(start_step)
+        t_run, t_abs, boundary = 0, int(start_step), 0
         while t_run < num_steps:
             n = min(self.chunk_steps, num_steps - t_run)
             fn, n_outer, thin = self._compile(n, False, None)
@@ -452,7 +470,16 @@ class ChainExecutor:
             carry, outs = fn(None, key, carry, xs)
             t_run += n
             t_abs += n
-            yield ChunkSnapshot(t_abs, copy(carry["params"]), copy(carry["state"]), outs)
+            boundary += 1
+            # the copy makes the probe safe to hold across the next chunk
+            # when that chunk donates (and deletes) the carry; a non-donated
+            # stream can hand out the scalar itself — one less dispatch on
+            # the caller's (possibly latency-critical) thread
+            probe = carry["t"].copy() if self.donate else carry["t"]
+            if boundary % snapshot_every == 0 or t_run >= num_steps:
+                yield ChunkSnapshot(t_abs, copy(carry["params"]), copy(carry["state"]), outs, probe)
+            else:
+                yield ChunkSnapshot(t_abs, None, None, outs, probe)
 
     # -- shard_map chain routing -------------------------------------------
 

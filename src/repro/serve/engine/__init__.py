@@ -6,11 +6,13 @@ int8-parked idle caches — dense stripes or a block-paged pool with
 refcounted prefix sharing (``paged=True``) — Bayesian model averaging over
 K ensemble members (optionally one fused mixture+selection kernel), and
 live snapshot refresh from a background coupled-sampler run gated by
-ensemble-spread diagnostics.
+ensemble-spread diagnostics — synchronous (``ChainRefresher``) or fully
+overlapped with decode (``RefreshScheduler``, DESIGN.md §9).
 """
 from .bma import BMA_MODES, fused_mixture_select, mixture_logprobs, reference_bma_decode
 from .cache_pool import BlockAllocator, CachePool, PagedCachePool, PagedParked, ParkedCache
 from .engine import ServeEngine, ServeReport
+from .refresh import RefreshScheduler
 from .registry import ChainRefresher, SnapshotRegistry
 from .scheduler import FCFSQueue, Request, RequestResult, synthetic_trace
 
@@ -23,6 +25,7 @@ __all__ = [
     "PagedCachePool",
     "PagedParked",
     "ParkedCache",
+    "RefreshScheduler",
     "Request",
     "RequestResult",
     "ServeEngine",

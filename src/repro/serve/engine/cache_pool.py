@@ -212,6 +212,7 @@ class BlockAllocator:
         self.prefix_queries = 0
         self.prefix_hits = 0
         self.shared_block_hits = 0
+        self.prefix_invalidated = 0
 
     # -- internals ----------------------------------------------------------
 
@@ -244,6 +245,22 @@ class BlockAllocator:
             if key is not None:
                 self._prefix.pop(key, None)
             self._free.append(b)
+
+    def invalidate_version(self, version: int) -> int:
+        """Eagerly drop prefix-sharing entries from superseded registry
+        versions.  Entries are keyed on ``(registry_version, prompt bytes)``,
+        so after a promotion the old-version entries can never be hit again —
+        without this they linger (holding their ``_block_prefix``
+        back-pointers) until the last sharer happens to exit.  Current
+        sharers are untouched: pages stay refcounted by their slots and are
+        freed exactly once, by the existing ``_decref`` path (which tolerates
+        the missing back-pointer).  Returns the number of entries dropped."""
+        stale = [k for k in self._prefix if k[0] != int(version)]
+        for k in stale:
+            for b in self._prefix.pop(k):
+                self._block_prefix.pop(b, None)
+        self.prefix_invalidated += len(stale)
+        return len(stale)
 
     def _prefix_key(self, prompt: np.ndarray, version: int):
         n_full = prompt.size // self.block_size
@@ -381,6 +398,7 @@ class BlockAllocator:
             "prefix_queries": self.prefix_queries,
             "prefix_hits": self.prefix_hits,
             "shared_block_hits": self.shared_block_hits,
+            "prefix_invalidated": self.prefix_invalidated,
         }
 
 
@@ -504,6 +522,11 @@ class PagedCachePool:
 
     def advance(self, slot: int) -> None:
         self.alloc.advance(slot)
+
+    def invalidate_version(self, version: int) -> int:
+        """Drop prefix entries superseded by a registry promotion (the
+        engine calls this once per version bump)."""
+        return self.alloc.invalidate_version(version)
 
     # -- park / restore -------------------------------------------------------
 

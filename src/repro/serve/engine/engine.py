@@ -97,9 +97,12 @@ class ServeEngine:
 
     ``members``: a (K, ...)-stacked parameter pytree or a
     :class:`SnapshotRegistry` (live refresh).  ``refresher`` (optional, a
-    :class:`ChainRefresher` bound to the same registry) is pumped every
-    ``refresh_every`` decode steps — stale members serve until the registry
-    promotes a candidate that passes the spread gate."""
+    :class:`ChainRefresher` or overlapped
+    :class:`~repro.serve.engine.refresh.RefreshScheduler` feeding the same
+    registry) is bound at construction and pumped EVERY decode tick; it
+    amortizes one sampler chunk per ``refresh_every`` ticks — stale members
+    serve until the registry promotes a candidate that passes the spread
+    gate."""
 
     def __init__(
         self,
@@ -142,6 +145,7 @@ class ServeEngine:
         self.refresh_every = int(refresh_every)
         if refresher is not None and refresher.registry is not self.registry:
             raise ValueError("refresher must feed this engine's registry")
+        self._seen_version = self.registry.version
         self.record_logprobs = bool(record_logprobs)
         self.paged = bool(paged)
         # Fused mixture+selection kernel: on by default where it compiles to
@@ -194,6 +198,29 @@ class ServeEngine:
         self.mesh = mesh
         self._member_axis, self._slot_axis = member_axis, slot_axis
         self._placed_version: int | None = None
+        # the unsharded "home" of the member stack — where a pre-staged
+        # candidate must land for promotion to be a pure pointer flip
+        leaf = jax.tree.leaves(self.registry.members)[0]
+        devs = leaf.devices() if hasattr(leaf, "devices") else set()
+        self._home_device = next(iter(devs)) if len(devs) == 1 else None
+        if mesh is None and self._home_device is not None:
+            # Commit every buffer feeding the compiled programs NOW.  A
+            # promoted candidate arrives COMMITTED (device_put at the flip),
+            # and committed vs uncommitted arguments are different lowerings
+            # even under one trace — left uncommitted, the first
+            # post-promotion decode and admit each silently re-lower and
+            # re-run XLA (~0.6s stalls on the serving path: exactly the
+            # bimodal p99 this engine exists to avoid).  Committing up front
+            # puts every program in the committed fixed point from the
+            # first trace; the mesh path gets the same effect from its
+            # pinned in/out shardings.
+            put = lambda t: jax.device_put(t, self._home_device)
+            self.registry.members = put(self.registry.members)
+            self.pool.caches = put(self.pool.caches)
+            self._tokens = put(self._tokens)
+            self._done = put(self._done)
+            self._budget = put(self._budget)
+            self._placed_version = self.registry.version
         if mesh is None:
             # the two compiled entry points; caches are donated through both
             # so the pool's buffers are recycled in place, never copied
@@ -255,6 +282,10 @@ class ServeEngine:
                     in_shardings=(mem_s, cache_s, tok_s, slot_s, slot_s, rep, rep, rep, rep),
                     out_shardings=(cache_s, tok_s, slot_s, slot_s, rep, rep, rep),
                 )
+        if refresher is not None and hasattr(refresher, "bind"):
+            # pacing, spare-device placement and warm-up compilation happen
+            # here, at construction — never on a serving request
+            refresher.bind(self)
 
     # -- compiled programs --------------------------------------------------
 
@@ -268,7 +299,45 @@ class ServeEngine:
                 self.registry.members, self._member_shardings
             )
             self._placed_version = self.registry.version
+        elif self._home_device is not None and self._placed_version != self.registry.version:
+            # unsharded: promotions from ANY source (overlapped scheduler,
+            # sync ChainRefresher, manual propose) are re-committed to the
+            # home device before decode consumes them, so the decode/admit
+            # lowerings never see a committedness change (see __init__);
+            # the overlapped flip pre-places and marks, making this a no-op
+            self.registry.members = jax.device_put(
+                self.registry.members, self._home_device
+            )
+            self._placed_version = self.registry.version
         return self.registry.members
+
+    def _place_members(self, tree):
+        """Pre-stage a candidate member stack with the engine's pinned
+        placement — the mesh ``NamedSharding``s, or the unsharded home
+        device — so a later promotion is a pure pointer flip that the
+        compiled decode program cannot distinguish from the old buffers.
+        The ``device_put`` is async-dispatched (no host sync)."""
+        if self.mesh is not None:
+            return jax.device_put(tree, self._member_shardings)
+        if self._home_device is not None:
+            return jax.device_put(tree, self._home_device)
+        return tree
+
+    def mark_members_placed(self) -> None:
+        """Tell :meth:`_members` the current registry version is already in
+        engine placement (the overlapped refresher pre-stages candidates
+        through :meth:`_place_members`, so the per-promotion re-put would be
+        redundant pytree work)."""
+        self._placed_version = self.registry.version
+
+    def _note_version(self) -> None:
+        """Per-tick version watch: on a promotion, eagerly invalidate the
+        paged pool's stale-version prefix entries (they can never be hit
+        again — the sharing key includes the version)."""
+        if self.registry.version != self._seen_version:
+            self._seen_version = self.registry.version
+            if self.paged:
+                self.pool.invalidate_version(self.registry.version)
 
     @property
     def decode_trace_count(self) -> int:
@@ -458,7 +527,9 @@ class ServeEngine:
 
         The loop per scheduler tick: (1) admit pending arrivals into free
         slots (prefill-on-admit, first token emitted), (2) pump the snapshot
-        refresher on its cadence, (3) one compiled decode step for the whole
+        refresher (amortized: a whole sampler chunk lands once per
+        ``refresh_every`` ticks, but its cost is spread over every tick in
+        between), (3) one compiled decode step for the whole
         slot axis, (4) collect emissions, finalize and recycle finished
         slots.  Idle periods (no active slots, future arrivals) fast-forward
         the tick clock.  Hitting ``max_steps`` finalizes the in-flight
@@ -469,7 +540,6 @@ class ServeEngine:
         results: list[RequestResult] = []
         submit_s: dict[int, float] = {}
         step = 0
-        last_refresh = 0
         steps_at_start = self.decode_steps
         t0 = time.perf_counter()
         wall = lambda: time.perf_counter() - t0
@@ -498,13 +568,12 @@ class ServeEngine:
                     break
                 queue.pop()
                 self._do_admit(req, step, submit_s[req.rid], active, results, wall)
-            if (
-                self.refresher is not None
-                and self.refresh_every
-                and step - last_refresh >= self.refresh_every
-            ):
-                self.refresher.refresh()
-                last_refresh = step
+            if self.refresher is not None and self.refresh_every:
+                # every tick: flip-if-ready + credit-paced micro-chunk
+                # dispatch (one full chunk per refresh_every ticks) — no
+                # single request ever eats a whole chunk
+                self.refresher.pump(step)
+            self._note_version()  # promotions (any source) invalidate stale prefixes
             if active:
                 key = jax.random.fold_in(self._key_decode, step)
                 if self.paged:

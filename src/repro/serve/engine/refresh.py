@@ -1,0 +1,334 @@
+"""Overlapped snapshot refresh: the background sampler never stalls decode.
+
+``ChainRefresher`` (registry.py) made live refresh *correct* but paid for it
+synchronously — each cadence tick ran a full executor chunk plus a
+host-synced spread gate inline with the decode loop (BENCH_serve.json:
+tokens/s collapsing ~30 → 11.8).  The paper's point is that this
+serialization is unnecessary: elastic coupling absorbs stale/perturbed
+center information into the center-noise covariance (Eq. 6), so the
+sampler and the decode stream have no ordering constraint between
+promotions — they only need to agree at the flip.
+
+``RefreshScheduler`` exploits that with four mechanisms (DESIGN.md §9):
+
+1. **Micro-chunk async dispatch with backpressure.**  The background
+   ``ChainExecutor.stream`` chunk is split into micro-chunks budgeted
+   against decode ticks (``chunk_steps / refresh_every`` sampler steps per
+   tick, credit-paced).  The scheduler's executor is built ``donate=False``:
+   dispatching a DONATED program blocks the host until the in-flight
+   computation releases the aliased buffer (measurably the whole chunk on
+   the CPU client), while a donate-free dispatch only enqueues — the
+   double-buffered carry is the price of a non-blocking pump.  A micro is
+   dispatched only when the previous one's ``ChunkSnapshot.probe`` reports
+   ``is_ready()`` (unspent credit banks, capped at two chunks), so a slow
+   sampler backs up on ITS device, never in the host queue.  With
+   ``key_mode='fold'`` the split is bit-identical to the unsplit chunk
+   (§3: chunking is invisible).
+2. **Lazy device-side gate.**  At a chunk boundary the candidate's spread
+   verdict (``ensemble_spread_device`` under jit) is *dispatched*, not
+   fetched; the registry parks (candidate, device-verdict) in its second
+   buffer.  The scalar fetch happens at flip time, and only once
+   ``jax.Array.is_ready()`` says it would not block.
+3. **Pointer-flip promotion.**  Candidates are staged raw on the sampler's
+   device (placing them at stage time would block on in-flight sampler
+   compute); the copy into the engine's pinned placement (mesh
+   ``NamedSharding``s, or the unsharded home device, via
+   ``ServeEngine._place_members``) happens inside ``flip_staged`` — on a
+   buffer the ready verdict proves is itself ready, so it is a bounded d2d
+   memcpy.  Promotion rebinds a reference to buffers that carry the decode
+   program's layouts — provably no retrace (the compile-count pin in
+   tests/test_serve_engine.py and tests/test_sharding.py).
+4. **Spare-device parking.**  When the engine's ``(member, slot)`` mesh
+   does not consume every local device, the background run's carry is
+   committed to a spare device — jit runs computation where its inputs
+   live, so sampler micro-chunks execute off the serving devices entirely.
+   Single-device hosts still benefit from 1–3 (overlap degrades to
+   interleaving, but the host thread never blocks).
+
+Warm-up (``bind``): the micro-chunk program and the gate reduction are
+compiled at engine construction against throwaway copies of the real
+avals, so first-promotion compile cost never lands on a serving request —
+the other half of the bimodal first-token p99 the synchronous path showed.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.run import ChainExecutor
+
+from .registry import SnapshotRegistry, _micro_split
+
+
+def _pick_device(engine, request):
+    """Placement policy for the background run.  ``request``: a concrete
+    ``jax.Device``, ``None`` (no placement — default device), or ``"auto"``:
+    prefer a local device the engine's mesh does not consume; without a
+    mesh, the last local device when more than one exists."""
+    if request != "auto":
+        return request
+    devs = list(jax.devices())
+    mesh = getattr(engine, "mesh", None) if engine is not None else None
+    if mesh is not None:
+        used = {d for d in mesh.devices.flat}
+        spare = [d for d in devs if d not in used]
+        return spare[-1] if spare else None
+    return devs[-1] if len(devs) > 1 else None
+
+
+class RefreshScheduler:
+    """Overlapped drop-in for :class:`~.registry.ChainRefresher`.
+
+    Same constructor surface (registry, sampler, grad_fn, stacked params,
+    fold key) plus placement/pacing knobs; the engine binds it at
+    construction and calls ``pump(step)`` every decode tick.  A pump does
+    at most three non-blocking things: flip a staged candidate whose
+    verdict is ready, accrue micro-chunk credit, and dispatch whole
+    credits' worth of micro-chunks (staging a candidate at each chunk
+    boundary).  The only way the host ever waits on the sampler is a
+    *forced* flip (``max_flip_deferrals`` exceeded, or draining the last
+    candidate after exhaustion) — counted in ``decode_steps_stalled`` /
+    ``stall_wall_s`` so BENCH rows can attribute latency to refresh.
+    """
+
+    def __init__(
+        self,
+        registry: SnapshotRegistry,
+        sampler,
+        grad_fn,
+        params,
+        *,
+        key,
+        state=None,
+        chunk_steps: int = 64,
+        micro_steps: int | None = None,
+        total_steps: int = 1 << 30,
+        members_of=None,
+        device="auto",
+        max_flip_deferrals: int | None = None,
+    ):
+        self.registry = registry
+        self.members_of = members_of or (lambda p: p)
+        self._sampler = sampler
+        self._grad_fn = grad_fn
+        self._params = params
+        self._state = sampler.init(params) if state is None else state
+        self._key = key
+        self._total_steps = int(total_steps)
+        self.chunk_steps = int(chunk_steps)
+        self._explicit_micro = micro_steps is not None
+        self.micro_steps = int(micro_steps) if micro_steps else self.chunk_steps
+        if self.chunk_steps % self.micro_steps:
+            raise ValueError("micro_steps must divide chunk_steps")
+        self._device_req = device
+        self.device = None
+        self._max_flip_deferrals = max_flip_deferrals
+        self._engine = None
+        self._ex = None
+        self._stream = None
+        self._credit = 0.0
+        self._rate = 1.0  # micro-chunks per pump; bind() paces to the cadence
+        self._deferrals = 0
+        self._probe = None  # last micro's ChunkSnapshot.probe (readiness gate)
+        self._cycle_t0: float | None = None
+        self.steps_done = 0
+        self.micro_chunks = 0
+        self.backpressure_ticks = 0
+        self.proposals = 0
+        self.refreshes = 0  # flips resolved (promoted or rejected)
+        self.promotions = 0
+        self.flips_deferred = 0
+        self.decode_steps_stalled = 0
+        self.stall_wall_s = 0.0
+        self.pump_wall_s = 0.0
+        self.refresh_walls: list[float] = []
+        self.exhausted = False
+
+    # -- engine binding / warm-up --------------------------------------------
+
+    def bind(self, engine) -> None:
+        """Attach to a ``ServeEngine``: pace micro-chunks to its
+        ``refresh_every`` cadence, park the background carry on a spare
+        device, and pre-compile the micro-chunk + gate programs."""
+        if self._stream is not None:
+            raise RuntimeError("bind() must precede the first pump/refresh")
+        self._engine = engine
+        cadence = max(int(getattr(engine, "refresh_every", 0)), 1)
+        if not self._explicit_micro:
+            self.micro_steps = _micro_split(self.chunk_steps, cadence)
+        self._rate = (self.chunk_steps // self.micro_steps) / cadence
+        self.device = _pick_device(engine, self._device_req)
+        if self.device is not None:
+            self._params = jax.device_put(self._params, self.device)
+            self._state = jax.device_put(self._state, self.device)
+            self._key = jax.device_put(self._key, self.device)
+        self._warmup()
+
+    def _make_executor(self) -> ChainExecutor:
+        # donate=False: a donated dispatch blocks the host until the
+        # in-flight chunk releases the aliased carry buffer — the opposite
+        # of overlap.  Double-buffering the carry keeps pump() non-blocking.
+        return ChainExecutor(
+            sampler=self._sampler,
+            grad_fn=lambda targets, _batch: self._grad_fn(targets),
+            chunk_steps=self.micro_steps,
+            key_mode="fold",
+            donate=False,
+        )
+
+    def _warmup(self) -> None:
+        """Compile the micro-chunk scan and the gate reduction before any
+        request is in flight.  The throwaway carry copies are consumed by
+        donation; with fold keying the warm-up run cannot perturb the real
+        stream's RNG (per-step keys come from the absolute step index)."""
+        copy = lambda tr: jax.tree.map(lambda x: jnp.asarray(x).copy(), tr)
+        self._ex = self._make_executor()
+        n = min(self.micro_steps, self._total_steps)
+        fn, _n_outer, thin = self._ex._compile(n, False, None)
+        carry = self._ex._init_carry(copy(self._params), copy(self._state), 0, self._key, False)
+        xs = self._ex._chunk_xs(0, 0, n, thin, None, False)
+        carry, _ = fn(None, self._key, carry, xs)
+        # second call on the PRODUCED carry: its scalars are now committed to
+        # the sampler device, a different jit signature than the fresh carry
+        # above — without this, micro #1 recompiles inside a served pump
+        out = fn(None, self._key, carry, xs)
+        # gate reduction, on the exact candidate avals a stage will see
+        # (the gate runs where the sampler lives; placement is flip-time)
+        health = self.registry.health_device(self.members_of(copy(self._params)))
+        # bind-time blocking is fine (no request in flight yet) and leaves
+        # the device queues empty when serving starts
+        jax.block_until_ready((out, health))
+
+    def _place(self, tree):
+        return self._engine._place_members(tree) if self._engine is not None else tree
+
+    def _ensure_stream(self):
+        if self._stream is None:
+            if self._ex is None:
+                self._ex = self._make_executor()
+            # copy_snapshots=False is safe ONLY because the executor is
+            # donate=False (nothing ever mutates or deletes the yielded
+            # buffers); it removes a per-boundary tree of copy dispatches
+            # from the pump — host time the decode loop would otherwise pay
+            self._stream = self._ex.stream(
+                self._params,
+                self._state,
+                num_steps=self._total_steps,
+                key=self._key,
+                snapshot_every=self.chunk_steps // self.micro_steps,
+                copy_snapshots=False,
+            )
+            self._params = self._state = None  # donated into the stream
+        return self._stream
+
+    # -- overlapped advancement ----------------------------------------------
+
+    def _dispatch_micro(self) -> None:
+        """Enqueue one micro-chunk; at a chunk boundary, pre-place the
+        candidate and stage it with a dispatched (unfetched) verdict.
+        Nothing here blocks the host."""
+        if self._cycle_t0 is None:
+            self._cycle_t0 = time.perf_counter()
+        try:
+            snap = next(self._ensure_stream())
+        except StopIteration:
+            self.exhausted = True
+            return
+        self.micro_chunks += 1
+        self.steps_done = snap.step
+        self._probe = snap.probe
+        if snap.params is not None:
+            # stage raw (sampler-device) — the gate reduction runs where the
+            # candidate lives; a device_put here would block the pump on
+            # in-flight sampler compute.  Placement happens at the flip.
+            self.registry.stage(self.members_of(snap.params))
+            self.proposals += 1
+
+    def _sampler_idle(self) -> bool:
+        """True when the last dispatched micro-chunk has retired (its device
+        probe is ready) — the gate that keeps the dispatch queue depth at
+        one and a slow sampler from accumulating unbounded in-flight work."""
+        return self._probe is None or bool(
+            getattr(self._probe, "is_ready", lambda: True)()
+        )
+
+    def _maybe_flip(self, *, force: bool) -> bool:
+        """Resolve the staged candidate if its verdict is ready (or we are
+        forced to wait for it); returns True iff promoted."""
+        if self.registry.staged is None:
+            return False
+        ready = self.registry.staged_ready()
+        may_defer = self._max_flip_deferrals is None or self._deferrals < self._max_flip_deferrals
+        if not ready and not force and may_defer:
+            self._deferrals += 1
+            self.flips_deferred += 1
+            return False
+        t0 = time.perf_counter()
+        # blocks only when not ready; placement of the ready candidate into
+        # the engine's pinned layout is a bounded d2d copy
+        promoted = self.registry.flip_staged(place=self._place)
+        if not ready:
+            self.stall_wall_s += time.perf_counter() - t0
+            self.decode_steps_stalled += 1
+        self._deferrals = 0
+        self.refreshes += 1
+        if self._cycle_t0 is not None:
+            self.refresh_walls.append(time.perf_counter() - self._cycle_t0)
+            self._cycle_t0 = None
+        if promoted:
+            self.promotions += 1
+            if self._engine is not None:
+                # candidate was placed at the flip: _members() must not re-put it
+                self._engine.mark_members_placed()
+        return promoted
+
+    def pump(self, step: int) -> bool:
+        """One decode tick's worth of refresh work.  Returns True iff a
+        promotion flipped in this call."""
+        del step  # pacing is credit-based, robust to per-run step resets
+        t0 = time.perf_counter()
+        promoted = self._maybe_flip(force=False)
+        if not self.exhausted:
+            micros_per_chunk = self.chunk_steps // self.micro_steps
+            self._credit = min(self._credit + self._rate, 2.0 * micros_per_chunk)
+            if self._credit >= 1.0 and not self._sampler_idle():
+                self.backpressure_ticks += 1
+            while self._credit >= 1.0 and not self.exhausted and self._sampler_idle():
+                self._credit -= 1.0
+                self._dispatch_micro()
+        if self.exhausted and self.registry.staged is not None:
+            # nothing further will be staged — don't strand the last candidate
+            promoted = self._maybe_flip(force=True) or promoted
+        self.pump_wall_s += time.perf_counter() - t0
+        return promoted
+
+    def refresh(self) -> bool:
+        """Synchronous parity surface (``ChainRefresher`` semantics):
+        advance to the next proposal boundary and resolve it, blocking on
+        the verdict.  Returns True iff promoted; False once exhausted."""
+        while not self.exhausted and self.registry.staged is None:
+            self._dispatch_micro()
+        return self._maybe_flip(force=True)
+
+    def stats(self) -> dict:
+        walls = self.refresh_walls
+        return {
+            "refreshes": self.refreshes,
+            "proposals": self.proposals,
+            "promotions": self.promotions,
+            "rejections": self.refreshes - self.promotions,
+            "micro_chunks": self.micro_chunks,
+            "micro_steps": self.micro_steps,
+            "steps_done": self.steps_done,
+            "backpressure_ticks": self.backpressure_ticks,
+            "flips_deferred": self.flips_deferred,
+            "decode_steps_stalled": self.decode_steps_stalled,
+            "stall_wall_s": round(self.stall_wall_s, 4),
+            "pump_wall_s": round(self.pump_wall_s, 4),
+            "refresh_wall_s": round(sum(walls), 4),
+            "per_refresh_wall_s": round(sum(walls) / len(walls), 4) if walls else 0.0,
+            "device": str(self.device) if self.device is not None else None,
+            "exhausted": self.exhausted,
+        }

@@ -9,19 +9,35 @@ executor chunk — and swapping them mid-flight — is a controlled
 perturbation of the same kind, unlike naive async whose stale gradients
 enter the dynamics directly (Chen et al., stale-gradient SG-MCMC).
 
-Promotion is GATED: ``propose`` runs ``ensemble_diagnostics`` on the
-candidate stack and refuses a collapsed ensemble (spread below
-``min_rel_spread``) — K identical members silently degrade Bayesian model
+Promotion is GATED: a candidate stack must pass the ensemble-spread check
+(``repro.diagnostics.ensemble_spread_device``) — a collapsed ensemble
+(spread below ``min_rel_spread``) silently degrades Bayesian model
 averaging to one model's predictions, and the registry is where that must
 be caught, before the stack ever serves.  Stale members keep serving until
-a candidate passes.
+a candidate passes.  The gate has two surfaces:
+
+* ``propose(candidate)`` — synchronous: runs the jitted spread reduction
+  and fetches the verdict immediately (one host round-trip);
+* ``stage(candidate)`` + ``flip_staged()`` — the OVERLAPPED path
+  (DESIGN.md §9): ``stage`` only *dispatches* the jitted reduction and
+  parks the candidate in the second member buffer; the scalar verdict is
+  fetched lazily at flip time (``staged_ready`` says whether that fetch
+  would block).  ``members`` never changes until a flip, and a flip is a
+  pointer swap — same pytree structure, same avals, so the engine's one
+  compiled decode program is untouched.
 
 ``ChainRefresher`` drives the background run cooperatively through
 ``ChainExecutor.stream`` (the chunk-boundary snapshot hook): each
 ``refresh()`` advances the sampler one chunk and proposes the live chain
-stack.  Cooperative (caller-paced) rather than threaded keeps the whole
-engine deterministic — the serving loop decides how often it pays the
-refresh cost, and a given (trace, seed, cadence) always reproduces.
+stack.  Bound to an engine (``bind``), it instead amortizes that chunk over
+``pump(step)`` calls — one micro-chunk at a time — so no single decode tick
+(and hence no single request) eats a whole chunk's cost; the cadence of
+full chunk+proposal cycles still matches the engine's ``refresh_every``.
+Cooperative (caller-paced) rather than threaded keeps the whole engine
+deterministic — the serving loop decides how often it pays the refresh
+cost, and a given (trace, seed, cadence) always reproduces.  The fully
+overlapped variant (async dispatch, lazy gate, pre-staged flips, spare-
+device placement) is ``repro.serve.engine.refresh.RefreshScheduler``.
 """
 from __future__ import annotations
 
@@ -30,13 +46,28 @@ from typing import Any
 
 import jax
 
+from repro.diagnostics import ensemble_spread_device
 from repro.run import ChainExecutor
-from repro.serve.loop import ensemble_diagnostics
+
+_health_jit = jax.jit(ensemble_spread_device)
+
+
+def _micro_split(chunk_steps: int, refresh_every: int) -> int:
+    """Largest divisor of ``chunk_steps`` not exceeding
+    ``ceil(chunk_steps / refresh_every)`` — the micro-chunk size that spreads
+    one chunk over a ``refresh_every``-tick cadence window while keeping
+    chunk boundaries (and hence proposal steps) exactly where they were."""
+    micro = max(1, -(-chunk_steps // max(refresh_every, 1)))
+    while chunk_steps % micro:
+        micro -= 1
+    return micro
 
 
 class SnapshotRegistry:
     """Holds the currently-serving (K, ...)-stacked ensemble; ``propose``
-    swaps it atomically iff the candidate passes the spread gate."""
+    swaps it atomically iff the candidate passes the spread gate, and the
+    ``stage``/``flip_staged`` pair does the same with the gate's host
+    round-trip deferred off the decode critical path."""
 
     def __init__(self, members, *, min_rel_spread: float = 1e-6, validate: bool = False):
         self.min_rel_spread = float(min_rel_spread)
@@ -45,27 +76,89 @@ class SnapshotRegistry:
         self.version = 0
         self.promoted = 0
         self.rejected = 0
+        self.staged_total = 0
         self.last_health: dict | None = None
+        self._staged: tuple[Any, dict] | None = None
         if validate:
-            health = ensemble_diagnostics(members, min_rel_spread=self.min_rel_spread)
+            health = self._fetch_health(_health_jit(members))
             self.last_health = health
             if health["collapsed"]:
                 raise ValueError(
                     f"initial ensemble is collapsed (rel_spread={health['rel_spread']:.3e})"
                 )
 
-    def propose(self, candidate) -> bool:
-        """Gate + swap.  Returns True iff ``candidate`` was promoted; on
-        rejection the previous members keep serving unchanged."""
+    # -- gate ---------------------------------------------------------------
+
+    def health_device(self, candidate) -> dict:
+        """Dispatch the jitted spread reduction on ``candidate``; returns a
+        dict of scalar DEVICE arrays (no host sync)."""
+        return _health_jit(candidate)
+
+    def _fetch_health(self, health_dev: dict) -> dict:
+        health = {k: float(v) for k, v in health_dev.items()}
+        health["num_chains"] = self.num_members
+        health["collapsed"] = bool(health["rel_spread"] < self.min_rel_spread)
+        return health
+
+    def _check_k(self, candidate) -> None:
         k = int(jax.tree.leaves(candidate)[0].shape[0])
         if k != self.num_members:
             raise ValueError(f"candidate has K={k}, registry serves K={self.num_members}")
-        health = ensemble_diagnostics(candidate, min_rel_spread=self.min_rel_spread)
+
+    # -- synchronous promotion ----------------------------------------------
+
+    def propose(self, candidate) -> bool:
+        """Gate + swap.  Returns True iff ``candidate`` was promoted; on
+        rejection the previous members keep serving unchanged."""
+        self.stage(candidate)
+        return self.flip_staged()
+
+    # -- overlapped promotion (stage now, flip later) ------------------------
+
+    @property
+    def staged(self):
+        """The parked (candidate, device-health) pair, or None."""
+        return self._staged
+
+    def stage(self, candidate, health=None) -> None:
+        """Park ``candidate`` in the second member buffer and dispatch its
+        spread verdict; replaces any previously staged candidate.  Nothing
+        here blocks: ``health`` (optional, from :meth:`health_device`) and
+        the candidate stay device-side until :meth:`flip_staged`."""
+        self._check_k(candidate)
+        if health is None:
+            health = self.health_device(candidate)
+        self._staged = (candidate, health)
+        self.staged_total += 1
+
+    def staged_ready(self) -> bool:
+        """True iff the staged verdict has been computed — i.e. a flip would
+        not block the host on the device stream."""
+        if self._staged is None:
+            return False
+        return all(
+            getattr(v, "is_ready", lambda: True)() for v in self._staged[1].values()
+        )
+
+    def flip_staged(self, place=None) -> bool:
+        """Fetch the staged verdict (tiny scalar transfer; already computed
+        when ``staged_ready``) and promote or reject.  Promotion rebinds
+        ``members`` — same pytree structure, same avals, no shape change.
+        ``place`` (optional) maps the candidate into its serving placement
+        at promotion time; since the verdict being ready implies the
+        candidate's buffers are ready (the reduction consumed them), that
+        is a bounded device-to-device copy, never a wait on sampler
+        compute."""
+        if self._staged is None:
+            return False
+        candidate, health_dev = self._staged
+        self._staged = None
+        health = self._fetch_health(health_dev)
         self.last_health = health
         if health["collapsed"]:
             self.rejected += 1
             return False
-        self.members = candidate
+        self.members = candidate if place is None else place(candidate)
         self.version += 1
         self.promoted += 1
         return True
@@ -75,6 +168,8 @@ class SnapshotRegistry:
             "version": self.version,
             "promoted": self.promoted,
             "rejected": self.rejected,
+            "staged_total": self.staged_total,
+            "staged_pending": self._staged is not None,
             "num_members": self.num_members,
             "last_health": self.last_health,
         }
@@ -89,7 +184,14 @@ class ChainRefresher:
     chunk (``chunk_steps`` sampler steps) and proposes the resulting stack;
     after ``total_steps`` the run is exhausted and ``refresh()`` returns
     False forever.  ``members_of`` maps the raw chain stack to the served
-    parameter stack (default: identity)."""
+    parameter stack (default: identity).
+
+    Bound to a :class:`ServeEngine` (``bind``; the engine does this at
+    construction), the engine pumps it EVERY decode tick and the chunk is
+    advanced in micro-chunks of ``chunk_steps / refresh_every`` sampler
+    steps — bit-identical dynamics (DESIGN.md §3: chunking is invisible),
+    same proposal cadence, but the cost is spread evenly across ticks
+    instead of being charged to whichever request triggers the cadence."""
 
     def __init__(
         self,
@@ -106,41 +208,103 @@ class ChainRefresher:
     ):
         self.registry = registry
         self.members_of = members_of or (lambda p: p)
-        ex = ChainExecutor(
-            sampler=sampler,
-            grad_fn=lambda targets, _batch: grad_fn(targets),
-            chunk_steps=chunk_steps,
-            key_mode="fold",
-        )
-        if state is None:
-            state = sampler.init(params)
-        self._stream = ex.stream(params, state, num_steps=total_steps, key=key)
+        self._sampler = sampler
+        self._grad_fn = grad_fn
+        self._params = params
+        self._state = sampler.init(params) if state is None else state
+        self._key = key
+        self._total_steps = int(total_steps)
+        self._stream = None
         self.chunk_steps = int(chunk_steps)
+        self.micro_steps = int(chunk_steps)  # bind() shrinks this
+        self._credit = 0.0
+        self._rate = 1.0  # micro-chunks accrued per pump; bind() sets
         self.steps_done = 0
         self.refreshes = 0
+        self.micro_chunks = 0
         self.refresh_wall_s = 0.0
         self.exhausted = False
 
-    def refresh(self) -> bool:
-        """Advance one chunk, propose the live stack.  Returns True iff a
-        new snapshot was promoted."""
-        if self.exhausted:
-            return False
+    # -- engine binding ------------------------------------------------------
+
+    def bind(self, engine) -> None:
+        """Called by ``ServeEngine.__init__``: amortize each chunk over the
+        engine's ``refresh_every``-tick cadence window."""
+        cadence = max(int(getattr(engine, "refresh_every", 0)), 1)
+        if self._stream is None:  # already-started streams keep their chunking
+            self.micro_steps = _micro_split(self.chunk_steps, cadence)
+        self._rate = (self.chunk_steps // self.micro_steps) / cadence
+
+    def _ensure_stream(self):
+        if self._stream is None:
+            ex = ChainExecutor(
+                sampler=self._sampler,
+                grad_fn=lambda targets, _batch: self._grad_fn(targets),
+                chunk_steps=self.micro_steps,
+                key_mode="fold",
+            )
+            self._stream = ex.stream(
+                self._params,
+                self._state,
+                num_steps=self._total_steps,
+                key=self._key,
+                snapshot_every=self.chunk_steps // self.micro_steps,
+            )
+            self._params = self._state = None  # donated into the stream
+        return self._stream
+
+    # -- advancement ---------------------------------------------------------
+
+    def _advance_micro(self) -> tuple[bool, bool]:
+        """Advance one micro-chunk; returns (hit a proposal boundary,
+        promoted)."""
         t0 = time.perf_counter()
         try:
-            snap = next(self._stream)
+            snap = next(self._ensure_stream())
         except StopIteration:
             self.exhausted = True
-            return False
-        self.refresh_wall_s += time.perf_counter() - t0
+            return False, False
+        self.micro_chunks += 1
         self.steps_done = snap.step
-        self.refreshes += 1
-        return self.registry.propose(self.members_of(snap.params))
+        promoted = False
+        boundary = snap.params is not None
+        if boundary:
+            self.refreshes += 1
+            promoted = self.registry.propose(self.members_of(snap.params))
+        self.refresh_wall_s += time.perf_counter() - t0
+        return boundary, promoted
+
+    def refresh(self) -> bool:
+        """Advance one full chunk, propose the live stack.  Returns True iff
+        a new snapshot was promoted."""
+        while not self.exhausted:
+            boundary, promoted = self._advance_micro()
+            if boundary:
+                return promoted
+        return False
+
+    def pump(self, step: int) -> bool:
+        """Amortized advancement: accrue ``rate`` micro-chunks of credit and
+        run whole ones; proposals still land exactly at chunk boundaries.
+        Returns True iff a promotion happened this call."""
+        del step  # pacing is credit-based, robust to per-run step resets
+        if self.exhausted:
+            return False
+        self._credit += self._rate
+        promoted = False
+        while self._credit >= 1.0 and not self.exhausted:
+            self._credit -= 1.0
+            _, p = self._advance_micro()
+            promoted |= p
+        return promoted
 
     def stats(self) -> dict:
         return {
             "refreshes": self.refreshes,
+            "micro_chunks": self.micro_chunks,
+            "micro_steps": self.micro_steps,
             "steps_done": self.steps_done,
             "refresh_wall_s": round(self.refresh_wall_s, 4),
+            "decode_steps_stalled": self.micro_chunks,  # sync path: every micro-chunk rides the decode thread
             "exhausted": self.exhausted,
         }

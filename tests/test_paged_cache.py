@@ -201,6 +201,39 @@ class TestBlockAllocator:
         assert not set(r0[:2]) & set(r1[:2])
         a.check()
 
+    def test_invalidate_version_drops_stale_entries(self):
+        """Promotion-time eager invalidation (the engine calls this on every
+        registry version bump): superseded entries vanish immediately, a
+        same-prompt re-admit at the old version misses, live sharers keep
+        their pages and free them exactly once."""
+        a = self._alloc()
+        prompt = np.arange(8, dtype=np.int32)  # 2 full blocks
+        r0 = a.admit(0, prompt, 2, version=0)
+        a.admit(1, prompt.copy(), 2, version=0)  # sharer of the v0 entry
+        assert a.prefix_hits == 1
+        dropped = a.invalidate_version(1)
+        assert dropped == 1 and a.prefix_invalidated == 1
+        assert not a._prefix and not a._block_prefix  # no stale residue
+        a.check()
+        # a v0 re-admit can no longer hit the dead entry
+        r2 = a.admit(2, prompt.copy(), 2, version=0)
+        assert a.prefix_hits == 1  # still just the pre-invalidation hit
+        assert not set(r0[:2]) & set(r2[:2])
+        # sharers of the invalidated entry still refcount their pages...
+        assert all(a.refcount[b] == 2 for b in r0[:2])
+        a.release(0)
+        assert all(a.refcount[b] == 1 for b in r0[:2])
+        a.check()
+        # ...and the pages are freed exactly once, by the last sharer
+        a.release(1)
+        a.release(2)
+        assert a.free_blocks == 16
+        a.check()
+        # invalidating the current version's own entries is a no-op
+        a.admit(0, prompt.copy(), 2, version=1)
+        assert a.invalidate_version(1) == 0
+        a.check()
+
     def test_oversized_request_refused(self):
         a = self._alloc()
         assert not a.can_admit(np.arange(30), 8)  # 37 positions > max_seq

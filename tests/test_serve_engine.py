@@ -12,6 +12,7 @@ The two acceptance pins from the issue live here:
 """
 from __future__ import annotations
 
+import time
 from types import SimpleNamespace
 
 import jax
@@ -27,6 +28,7 @@ from repro.serve import generate
 from repro.serve.engine import (
     CachePool,
     ChainRefresher,
+    RefreshScheduler,
     Request,
     ServeEngine,
     SnapshotRegistry,
@@ -464,6 +466,214 @@ class TestRegistry:
         assert refr.refresh()  # independent per-element noise => spread > 0
         assert refr.refresh() and not refr.exhausted
         assert not refr.refresh() and refr.exhausted  # total_steps consumed
+
+    def test_chain_refresher_pump_amortizes_chunks(self):
+        """Bound to a refresh_every=4 engine, an 8-step chunk splits into
+        four 2-step micro-chunks paced one per tick — no single pump (and
+        hence no single request) eats the whole chunk, and proposal
+        boundaries stay at exact chunk multiples."""
+        grad_fn = lambda p: p
+        start = jnp.zeros((2, 3))
+        reg = SnapshotRegistry(start + jnp.arange(2.0)[:, None])
+        refr = ChainRefresher(
+            reg, core.sgld(step_size=0.1), grad_fn, start,
+            key=jax.random.PRNGKey(0), chunk_steps=8, total_steps=16,
+        )
+        refr.bind(SimpleNamespace(refresh_every=4))
+        assert refr.micro_steps == 2  # largest divisor of 8 <= ceil(8/4)
+        before = [refr.micro_chunks]
+        flips = []
+        for i in range(8):
+            flips.append(refr.pump(i))
+            before.append(refr.micro_chunks)
+        assert [b - a for a, b in zip(before, before[1:])] == [1] * 8  # 1 micro/tick
+        assert flips == [False, False, False, True] * 2  # chunk boundaries only
+        assert refr.refreshes == 2 and refr.steps_done == 16
+        assert reg.version == 2  # every proposal promoted (noise => spread)
+        assert not refr.pump(8) and refr.exhausted
+
+    def test_chain_refresher_split_is_bit_identical(self):
+        """DESIGN.md §3: fold keying makes micro-chunking invisible — the
+        bound (micro-chunked) refresher promotes exactly the members the
+        legacy whole-chunk refresher does."""
+        grad_fn = lambda p: p
+        # fresh arrays per refresher: the stream DONATES the start carry
+        mk = lambda: ChainRefresher(
+            SnapshotRegistry(jnp.zeros((2, 3)) + jnp.arange(2.0)[:, None]),
+            core.sgld(step_size=0.1), grad_fn, jnp.zeros((2, 3)),
+            key=jax.random.PRNGKey(3), chunk_steps=8, total_steps=8,
+        )
+        legacy = mk()
+        legacy.refresh()
+        split = mk()
+        split.bind(SimpleNamespace(refresh_every=4))
+        for i in range(4):
+            split.pump(i)
+        assert split.micro_steps < split.chunk_steps  # genuinely split
+        np.testing.assert_array_equal(
+            np.asarray(legacy.registry.members), np.asarray(split.registry.members)
+        )
+
+
+class TestOverlappedRefresh:
+    """DESIGN.md §9: the RefreshScheduler's lazy gate, pointer-flip
+    promotions (compile-count pinned), credit pacing and observability."""
+
+    @staticmethod
+    def _toy_sched(reg, start, **kw):
+        base = dict(key=jax.random.PRNGKey(0), chunk_steps=4, total_steps=8)
+        base.update(kw)
+        return RefreshScheduler(
+            reg, core.sgld(step_size=0.1), lambda p: p, start, **base
+        )
+
+    @staticmethod
+    def _model_sched(stack, reg, **kw):
+        """Chain-stacked SGLD around member 0 of a real tiny-model stack
+        (same dynamics as test_live_refresh_through_engine)."""
+        center = jax.tree.map(lambda x: x[0], stack)
+        grad_fn = lambda p: jax.tree.map(lambda x, c: 2500.0 * (x - c), p, center)
+        start = jax.tree.map(lambda x: jnp.broadcast_to(x[0][None], x.shape) + 0.0, stack)
+        base = dict(key=jax.random.PRNGKey(8), chunk_steps=4)
+        base.update(kw)
+        return RefreshScheduler(reg, core.sgld(step_size=8e-5), grad_fn, start, **base)
+
+    def test_stage_flip_lazy_gate(self):
+        """stage() never touches the serving stack; flip_staged() promotes
+        or rejects on the deferred device verdict; restaging replaces."""
+        stack = {"w": jnp.arange(8.0).reshape(2, 4)}
+        reg = SnapshotRegistry(stack)
+        assert not reg.staged_ready()  # nothing staged
+        reg.stage(jax.tree.map(lambda x: x * 1.5, stack))
+        assert reg.staged is not None and reg.version == 0  # serving unchanged
+        deadline = time.monotonic() + 10.0
+        while not reg.staged_ready() and time.monotonic() < deadline:
+            time.sleep(0.001)
+        assert reg.staged_ready()  # verdict computed without a host fetch
+        assert reg.flip_staged() and reg.version == 1 and reg.staged is None
+        # collapsed candidate: staged, then rejected at flip — serving intact
+        reg.stage({"w": jnp.ones((2, 4))})
+        assert not reg.flip_staged()
+        assert reg.version == 1 and reg.rejected == 1
+        assert not reg.flip_staged()  # nothing staged -> no-op
+        # restaging replaces the parked candidate; last one wins
+        reg.stage(jax.tree.map(lambda x: x * 2.0, stack))
+        reg.stage(jax.tree.map(lambda x: x * 3.0, stack))
+        assert reg.staged_total == 4
+        assert reg.flip_staged()
+        np.testing.assert_allclose(
+            np.asarray(reg.members["w"]), np.asarray(stack["w"]) * 3.0
+        )
+        with pytest.raises(ValueError):
+            reg.stage({"w": jnp.ones((3, 4))})  # K mismatch still refused
+
+    def test_scheduler_sync_parity_and_exhaustion(self):
+        """refresh() mirrors ChainRefresher semantics, including the
+        exhaustion contract."""
+        start = jnp.zeros((2, 3))
+        reg = SnapshotRegistry(start + jnp.arange(2.0)[:, None])
+        sched = self._toy_sched(reg, start)
+        assert sched.refresh()
+        assert sched.refresh() and not sched.exhausted
+        assert not sched.refresh() and sched.exhausted
+        assert not sched.pump(0)  # exhausted pump is a cheap no-op
+        st = sched.stats()
+        assert st["promotions"] == 2 and st["exhausted"]
+
+    def test_scheduler_drains_last_candidate_on_exhaustion(self):
+        """A candidate staged at the final boundary is not stranded: the
+        pump after exhaustion force-flips it.  Pumps are polled on a
+        deadline because dispatch is backpressured on the previous micro's
+        device-side completion."""
+        start = jnp.zeros((2, 3))
+        reg = SnapshotRegistry(start + jnp.arange(2.0)[:, None])
+        sched = self._toy_sched(reg, start, chunk_steps=4, total_steps=4)
+        flipped, deadline = [], time.monotonic() + 10.0
+        for i in range(10_000):
+            flipped.append(sched.pump(i))
+            if (reg.version >= 1 and sched.exhausted) or time.monotonic() > deadline:
+                break
+            time.sleep(0.001)
+        assert reg.version == 1 and sched.exhausted
+        assert any(flipped)
+
+    @pytest.mark.parametrize("paged", [False, True], ids=["dense", "paged"])
+    def test_compile_pin_across_promotions(self, paged):
+        """The acceptance pin: one compiled decode program across >= 3
+        overlapped promotions, dense and paged.  Candidates are pre-staged
+        with the engine's placement, so a flip is a pointer swap the
+        compiled program cannot observe."""
+        cfg = tiny_cfg()
+        model = get_model(cfg)
+        stack = member_stack(cfg, model, 2)
+        reg = SnapshotRegistry(stack)
+        sched = self._model_sched(stack, reg)
+        engine = ServeEngine(
+            cfg, model, reg, num_slots=2, max_seq=24, paged=paged, block_size=8,
+            refresher=sched, refresh_every=2,
+        )
+        reqs = synthetic_trace(
+            8, vocab_size=cfg.vocab_size, prompt_lens=(5,), max_new=8,
+            mean_interarrival=1.5, seed=4,
+        )
+        report = engine.run(reqs)
+        assert reg.promoted >= 3, reg.stats()
+        assert report.trace_counts["decode"] == 1, report.trace_counts
+        assert engine.decode_trace_count == 1
+        # observability surfaced through ServeReport (satellite)
+        rf = report.refresher
+        assert rf["promotions"] == reg.promoted
+        assert rf["micro_chunks"] >= rf["proposals"] >= rf["promotions"]
+        assert rf["per_refresh_wall_s"] >= 0.0
+        assert {"decode_steps_stalled", "stall_wall_s", "flips_deferred",
+                "rejections", "pump_wall_s"} <= rf.keys()
+        assert len(report.results) == 8
+
+    def test_warmup_compiles_before_serving(self):
+        """bind() pre-compiles the micro-chunk and gate programs: the first
+        pump's dispatch must not add compile cost to a serving request.
+        Proxy assertion: after bind, the scheduler's executor already holds
+        a compiled micro-chunk program."""
+        cfg = tiny_cfg()
+        model = get_model(cfg)
+        stack = member_stack(cfg, model, 2)
+        reg = SnapshotRegistry(stack)
+        sched = self._model_sched(stack, reg, total_steps=1 << 20)
+        ServeEngine(
+            cfg, model, reg, num_slots=2, max_seq=16,
+            refresher=sched, refresh_every=2,
+        )
+        assert sched._ex is not None and len(sched._ex._compiled) == 1
+        assert sched.micro_steps == 2  # paced to the cadence
+        assert sched.micro_chunks == 0  # warm-up did not advance the stream
+
+    def test_promotion_invalidates_stale_prefix_entries(self):
+        """Engine-level satellite: a mid-flight registry version bump
+        eagerly drops old-version prefix-sharing entries from the paged
+        allocator — without waiting for their last sharer to exit — and
+        the live sharers keep decoding unharmed."""
+        cfg = tiny_cfg()
+        model = get_model(cfg)
+        stack = member_stack(cfg, model, 2)
+        reg = SnapshotRegistry(stack)
+        sched = self._model_sched(stack, reg)
+        engine = ServeEngine(
+            cfg, model, reg, num_slots=2, max_seq=24, paged=True, block_size=8,
+            refresher=sched, refresh_every=2,
+        )
+        prompt = np.arange(1, 9, dtype=np.int32)  # exactly one full block
+        reqs = [Request(rid=i, prompt=prompt.copy(), max_new=8, arrival_step=2 * i)
+                for i in range(6)]
+        report = engine.run(reqs)
+        assert reg.promoted >= 1
+        st = engine.pool.stats()
+        # every promotion had at least one same-version entry alive (the
+        # shared prompt's sharers decode for 8 ticks) -> eager drops fired
+        assert st["prefix_invalidated"] >= 1
+        assert all(k[0] == reg.version for k in engine.pool.alloc._prefix)
+        engine.pool.alloc.check()
+        assert engine.decode_trace_count == 1
+        assert len(report.results) == 6
 
 
 # ---------------------------------------------------------------------------

@@ -344,6 +344,47 @@ class TestShardedServeEngine:
         assert {r.rid: r.tokens.tolist() for r in eng.run(self._requests()).results} == tok0
         assert eng.decode_trace_count == 1
 
+    def test_overlapped_refresh_parks_on_spare_device(self):
+        """DESIGN.md §9 on a mesh: make_engine_mesh(2,2) on 8 forced devices
+        leaves 4 spare — the RefreshScheduler must park the background chain
+        there, pre-stage candidates with the engine's NamedShardings, and
+        promote >= 3 times without retracing or stalling decode."""
+        util.require_devices(MULTI_N)
+        from test_serve_engine import stub_members
+
+        from repro import core
+        from repro.launch.mesh import make_engine_mesh
+        from repro.serve.engine import RefreshScheduler, SnapshotRegistry
+        from repro.serve.engine.scheduler import Request
+
+        stack = stub_members(4)
+        reg = SnapshotRegistry(stack)
+        center = jax.tree.map(lambda x: x[0], stack)
+        sched = RefreshScheduler(
+            reg,
+            core.sgld(step_size=8e-5),
+            lambda p: jax.tree.map(lambda x, c: 2500.0 * (x - c), p, center),
+            jax.tree.map(lambda x: jnp.broadcast_to(x[0][None], x.shape) + 0.0, stack),
+            key=jax.random.PRNGKey(8),
+            chunk_steps=4,
+        )
+        mesh = make_engine_mesh(2, 2)
+        eng = self._engine(mesh, members=reg, refresher=sched, refresh_every=2)
+        mesh_devs = set(np.asarray(mesh.devices).flat)
+        assert sched.device is not None and sched.device not in mesh_devs
+        reqs = [
+            Request(rid=i, prompt=np.arange(1, 3 + i % 3, dtype=np.int32),
+                    max_new=8, arrival_step=i)
+            for i in range(8)
+        ]
+        report = eng.run(reqs)
+        assert reg.promoted >= 3, reg.stats()
+        assert eng.decode_trace_count == 1, report.trace_counts
+        assert eng._placed_version == reg.version
+        rf = report.refresher
+        assert rf["decode_steps_stalled"] == 0  # lazy gate: decode never blocked
+        assert rf["micro_chunks"] >= rf["proposals"] >= rf["promotions"] >= 3
+
     def test_refresh_replaces_members_once_per_version(self):
         util.require_devices(MULTI_N)
         from test_serve_engine import stub_members
