@@ -49,3 +49,16 @@ def time_fn(fn, *args, iters: int = 20, warmup: int = 3):
 def emit(name: str, us_per_call: float, derived):
     print(f"{name},{us_per_call:.1f},{derived}")
     ROWS.append({"name": name, "us_per_call": round(float(us_per_call), 3), "derived": derived})
+
+
+def manifest() -> dict:
+    """The shared run manifest (git sha, jax/backend, device kind/count)
+    stamped into every BENCH_*.json — so any artifact can be matched back to
+    the exact code + backend state that produced it."""
+    import sys as _sys
+    from pathlib import Path as _Path
+
+    _sys.path.insert(0, str(_Path(__file__).resolve().parent.parent / "src"))
+    from repro.obs import run_manifest
+
+    return run_manifest()

@@ -56,6 +56,7 @@ def _write_json(name: str, extra, seconds: float) -> None:
     payload = {
         "bench": name,
         "config": _config(),
+        "manifest": common.manifest(),
         "wall_s": round(seconds, 2),
         "rows": list(common.ROWS),
         **{k: v for k, v in common.EXTRAS.items()},
@@ -75,7 +76,15 @@ def main(argv=None) -> None:
                     help=f"positional bench names (same set as --bench): {', '.join(BENCHES)}")
     ap.add_argument("--bench", nargs="*", default=None, choices=list(BENCHES))
     ap.add_argument("--no-json", action="store_true", help="skip BENCH_*.json artifacts")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="export a Perfetto trace.json covering every bench run")
     args = ap.parse_args(argv)
+    tracer = None
+    if args.trace:
+        sys.path.insert(0, str(ROOT / "src"))
+        from repro import obs
+
+        tracer = obs.enable_tracing()
     unknown = [b for b in args.bench_names if b not in BENCHES]
     if unknown:
         ap.error(f"unknown bench(es) {unknown}; choose from {list(BENCHES)}")
@@ -99,6 +108,9 @@ def main(argv=None) -> None:
             failures.append(name)
             print(f"# {name} FAILED: {e!r}", flush=True)
             traceback.print_exc()
+    if tracer is not None:
+        tracer.export(args.trace)
+        print(f"# trace written to {args.trace} ({len(tracer)} events)", flush=True)
     if failures:
         sys.exit(f"benchmarks failed: {failures}")
 

@@ -36,6 +36,28 @@ REPRO_MULTIDEVICE_CHILD=1 JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}" \
 if [[ "${SKIP_BENCH:-0}" != "1" ]]; then
   echo "== bench smoke: overhead (writes BENCH_overhead.json) =="
   REPRO_BENCH_QUICK=1 python -m benchmarks.run --bench overhead
+
+  echo "== telemetry gate: instrumented-vs-off overhead < 3% + manifest schema =="
+  python - <<'PY'
+import json
+from repro.obs.validate import validate_manifest
+
+d = json.load(open("BENCH_overhead.json"))
+ob = d["perf"]["obs_overhead"]
+assert ob["overhead_pct"] < 3.0, f"tracer overhead {ob['overhead_pct']:.2f}% >= 3%"
+assert ob["implied_pct"] < 3.0, f"implied span cost {ob['implied_pct']:.3f}% >= 3%"
+errs = validate_manifest(d["manifest"])
+assert not errs, errs
+print(f"overhead {ob['overhead_pct']:+.2f}% end-to-end "
+      f"(span-cost bound {ob['implied_pct']:.3f}%); BENCH manifest OK")
+PY
+
+  echo "== traced serve smoke: live-refresh engine run -> Perfetto trace.json =="
+  TRACE_OUT="$(mktemp -t repro_trace_XXXXXX.json)"
+  python -m repro.launch.serve --arch qwen3-0.6b --smoke --engine --slots 2 \
+    --requests 6 --ensemble 2 --refresh-every 4 --gen 6 --trace "$TRACE_OUT"
+  python -m repro.obs "$TRACE_OUT" --require serve
+  rm -f "$TRACE_OUT"
   echo "== bench smoke: serve engine incl. refresh-SLO row (overlapped vs frozen p99; writes BENCH_serve.json) =="
   REPRO_BENCH_QUICK=1 python -m benchmarks.run serve
   echo "== bench smoke: adaptive tier (preconditioned vs plain ESS/sec; writes BENCH_adaptive.json) =="

@@ -32,6 +32,9 @@ import jax
 from repro import configs
 from repro.launch import mesh as mesh_lib
 from repro.launch.specs import build_cell
+from repro.obs import get_logger
+
+log = get_logger("dryrun")
 
 COLLECTIVE_RE = re.compile(
     r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
@@ -198,23 +201,22 @@ def main(argv=None):
         label = f"{arch} x {shape} x {'2-pod(512)' if mp else '1-pod(256)'}"
         try:
             rec = run_cell(arch, shape, mp, out_dir, args.chains, args.sync_every, tag=args.tag)
-            print(
+            log.info(
                 f"[ok] {label}: compile={rec['compile_s']}s "
                 f"flops/dev={rec['cost_analysis'].get('flops', float('nan')):.3e} "
                 f"coll_B/dev={rec['collective_bytes_per_device']:.3e} "
-                f"args/dev={rec['memory_analysis'].get('argument_size_in_bytes', -1)}",
-                flush=True,
+                f"args/dev={rec['memory_analysis'].get('argument_size_in_bytes', -1)}"
             )
         except Exception as e:
             failures.append((label, repr(e)))
-            print(f"[FAIL] {label}: {e!r}", flush=True)
+            log.error(f"[FAIL] {label}: {e!r}")
             traceback.print_exc()
     if failures:
-        print(f"\n{len(failures)} cell(s) FAILED:")
+        log.error(f"{len(failures)} cell(s) FAILED:")
         for l, e in failures:
-            print(f"  {l}: {e}")
+            log.error(f"  {l}: {e}")
         sys.exit(1)
-    print(f"\nall {len(todo)} cells compiled OK")
+    log.info(f"all {len(todo)} cells compiled OK")
 
 
 if __name__ == "__main__":

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 
 from repro import configs
 from repro import core
+from repro import obs
 from repro.models import get_model, init_params
 from repro.serve.engine import (
     ChainRefresher,
@@ -40,6 +41,8 @@ from repro.serve.loop import (
     make_prefill_step,
 )
 from repro.serve.sampling import SamplingParams
+
+log = obs.get_logger("serve")
 
 # prior-bootstrap ensemble: members are thinned SGLD draws from
 # N(params_init, PRIOR_SCALE^2 I) — a posterior stand-in when no sampled
@@ -117,7 +120,7 @@ def _run_engine(args, cfg, model):
     k = max(args.ensemble, 1)
     if k > 1:
         members, res = _bootstrap_ensemble(specs, key, k)
-        print(f"ensemble: K={k} collected at {res.steps_per_s:.0f} steps/s")
+        log.info(f"ensemble: K={k} collected at {res.steps_per_s:.0f} steps/s")
     else:
         members = jax.tree.map(lambda x: x[None], init_params(specs, key))
     registry = SnapshotRegistry(members)
@@ -142,22 +145,22 @@ def _run_engine(args, cfg, model):
     )
     report = engine.run(trace)
     pct = report.latency_percentiles()
-    print(
+    log.info(
         f"served {len(report.results)} requests / {report.total_tokens} tokens "
         f"in {report.wall_s:.2f}s ({report.tokens_per_s:.1f} tok/s, "
         f"slots={args.slots}, K={k}, decode_traces={report.trace_counts.get('decode')})"
     )
-    print(
+    log.info(
         f"latency p50={pct['latency_p50_s'] * 1e3:.1f}ms p99={pct['latency_p99_s'] * 1e3:.1f}ms  "
         f"first-token p50={pct['first_token_p50_s'] * 1e3:.1f}ms "
         f"p99={pct['first_token_p99_s'] * 1e3:.1f}ms"
     )
     if refresher is not None:
         rf = report.refresher
-        print(f"snapshots: {report.registry['version']} promoted, {report.registry['rejected']} rejected, "
+        log.info(f"snapshots: {report.registry['version']} promoted, {report.registry['rejected']} rejected, "
               f"{rf['steps_done']} sampler steps")
         if "pump_wall_s" in rf:  # overlapped scheduler observability
-            print(
+            log.info(
                 f"overlap: {rf['micro_chunks']} micro-chunks of {rf['micro_steps']} steps "
                 f"on {rf['device'] or 'default device'}, pump {rf['pump_wall_s']:.3f}s, "
                 f"per-refresh {rf['per_refresh_wall_s'] * 1e3:.1f}ms, "
@@ -190,12 +193,19 @@ def main(argv=None):
     ap.add_argument("--refresh-mode", choices=("overlapped", "sync"), default="overlapped",
                     help="overlapped: async micro-chunk scheduler (decode never stalls); "
                          "sync: legacy inline ChainRefresher")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="export a Perfetto trace.json of the run to PATH")
     args = ap.parse_args(argv)
 
+    tracer, trace_path = obs.configure(args.trace)
     cfg = configs.get_config(args.arch, smoke=args.smoke)
     model = get_model(cfg)
     if args.engine:
-        return _run_engine(args, cfg, model)
+        report = _run_engine(args, cfg, model)
+        if trace_path:
+            tracer.export(trace_path)
+            log.info(f"trace written to {trace_path} ({len(tracer)} events)")
+        return report
     max_seq = args.prompt_len + args.gen + 1
     key = jax.random.PRNGKey(args.seed)
     batch = {"tokens": jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab_size)}
@@ -210,7 +220,7 @@ def main(argv=None):
             model.param_specs(cfg), jax.random.PRNGKey(args.seed), args.ensemble
         )
         health = ensemble_diagnostics(params)
-        print(
+        log.info(
             f"ensemble: K={health['num_chains']} spread={health['chain_spread']:.3e} "
             f"rel={health['rel_spread']:.3e} "
             f"(collected at {res.steps_per_s:.0f} steps/s)"
@@ -228,9 +238,12 @@ def main(argv=None):
             out.append(tok)
         toks = jnp.concatenate(out, axis=1)
     dt = time.time() - t0
-    print(f"generated {toks.shape} tokens in {dt:.2f}s "
+    log.info(f"generated {toks.shape} tokens in {dt:.2f}s "
           f"({args.batch * args.gen / dt:.1f} tok/s, ensemble={args.ensemble})")
-    print(toks)
+    log.info(str(toks))
+    if trace_path:
+        tracer.export(trace_path)
+        log.info(f"trace written to {trace_path} ({len(tracer)} events)")
     return toks
 
 

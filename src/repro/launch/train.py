@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs
+from repro import obs
 from repro.core import tree_broadcast_axis0
 from repro.data import synthetic_token_stream
 from repro.data.pipeline import chain_batches
@@ -25,6 +26,8 @@ from repro.launch.specs import default_sampler, vlm_patches
 from repro.models import get_model, init_params
 from repro.train.loop import LoopConfig, run
 from repro.train.step import make_train_step
+
+log = obs.get_logger("train")
 
 
 def build_batch_fn(cfg, num_chains: int, per_chain: int, seq_len: int, seed: int = 0):
@@ -68,8 +71,11 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--preempt-at", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="export a Perfetto trace.json of the run to PATH")
     args = ap.parse_args(argv)
 
+    tracer, trace_path = obs.configure(args.trace)
     cfg = configs.get_config(args.arch, smoke=args.smoke)
     model = get_model(cfg)
     sampler = default_sampler(cfg, args.arch, args.chains, args.sync_every)
@@ -102,7 +108,10 @@ def main(argv=None):
         num_chains=args.chains, alpha=args.alpha, sampler=sampler,
     )
     if history:
-        print(f"final nll/token: {history[-1]['nll_per_token']:.4f}")
+        log.info(f"final nll/token: {history[-1]['nll_per_token']:.4f}")
+    if trace_path:
+        tracer.export(trace_path)
+        log.info(f"trace written to {trace_path} ({len(tracer)} events)")
     return history
 
 

@@ -1,0 +1,6 @@
+"""``python -m repro.obs <trace.json> [--require PROFILE]`` — the
+validation CLI (same surface as ``repro.obs.validate``, without runpy's
+re-import warning for the submodule)."""
+from repro.obs.validate import main
+
+raise SystemExit(main())

@@ -1,0 +1,96 @@
+"""Output sinks: the shared run manifest and a JSONL metrics stream.
+
+The manifest is the provenance block stamped into every artifact a run
+emits — ``trace.json`` (``otherData.manifest``), each ``BENCH_*.json``
+(``manifest`` key, via ``benchmarks/common.py``), and the JSONL metrics
+stream header — so any two artifacts can be matched to the same code +
+backend + device state after the fact.
+"""
+from __future__ import annotations
+
+import json
+import platform
+import subprocess
+import sys
+import time
+
+MANIFEST_KEYS = (
+    "git_sha",
+    "jax_version",
+    "backend",
+    "device_kind",
+    "device_count",
+    "python",
+    "platform",
+    "timestamp",
+)
+
+
+def _git_sha() -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            capture_output=True, text=True, timeout=5,
+        )
+        return out.stdout.strip() if out.returncode == 0 else "unknown"
+    except (OSError, subprocess.TimeoutExpired):
+        return "unknown"
+
+
+def run_manifest() -> dict:
+    """Provenance of the current run.  Importing jax here is fine — every
+    caller already has it resident; failures degrade to "unknown" rather
+    than taking the run down."""
+    try:
+        import jax
+
+        backend = jax.default_backend()
+        devices = jax.devices()
+        device_kind = devices[0].device_kind if devices else "unknown"
+        device_count = len(devices)
+        jax_version = jax.__version__
+    except Exception:  # manifest must never be the thing that crashes a run
+        backend = device_kind = jax_version = "unknown"
+        device_count = 0
+    return {
+        "git_sha": _git_sha(),
+        "jax_version": jax_version,
+        "backend": backend,
+        "device_kind": device_kind,
+        "device_count": device_count,
+        "python": sys.version.split()[0],
+        "platform": platform.platform(),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+    }
+
+
+class JsonlSink:
+    """Append-one-JSON-object-per-line stream.  First line is the run
+    manifest; ``metrics()`` lines carry periodic registry snapshots and
+    ``summary()`` closes the run."""
+
+    def __init__(self, path):
+        self.path = path
+        self._wrote_header = False
+
+    def _write(self, obj: dict) -> None:
+        with open(self.path, "a") as f:
+            f.write(json.dumps(obj) + "\n")
+
+    def header(self, manifest: dict | None = None) -> None:
+        self._write({"kind": "manifest", **(manifest or run_manifest())})
+        self._wrote_header = True
+
+    def metrics(self, snapshot: dict, step: int | None = None) -> None:
+        if not self._wrote_header:
+            self.header()
+        rec = {"kind": "metrics"}
+        if step is not None:
+            rec["step"] = step
+        rec.update(snapshot)
+        self._write(rec)
+
+    def summary(self, snapshot: dict, **extra) -> None:
+        if not self._wrote_header:
+            self.header()
+        self._write({"kind": "summary", **extra, **snapshot})

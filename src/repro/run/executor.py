@@ -47,6 +47,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import apply_updates, tree_broadcast_axis0
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.diagnostics import (
     BatchMeansState,
     MomentState,
@@ -376,11 +378,17 @@ class ChainExecutor:
         t_run, t_abs = 0, int(start_step)
         t0 = time.perf_counter()
         stopped = False
+        chunks = 0
         while t_run < num_steps and not stopped:
             n = min(self.chunk_steps, num_steps - t_run)
             fn, n_outer, thin = self._compile(n, sweep, key_axis)
             xs = self._chunk_xs(t_run, t_abs, n, thin, keys, sweep)
-            carry, outs = fn(hyper, key, carry, xs)
+            # the span measures host-side DISPATCH (async enqueue), not
+            # device compute — executor.settle below is where compute lands
+            with obs_trace.get().span("executor.chunk", cat="executor",
+                                      step=t_abs, n=n):
+                carry, outs = fn(hyper, key, carry, xs)
+            chunks += 1
             t_run += n
             t_abs += n
             if self.trace_fn is not None:
@@ -399,8 +407,13 @@ class ChainExecutor:
                     hyper = new_hyper
         # dispatch is async: settle the final carry (same executable as the
         # chunk outputs) so wall_s measures compute, not enqueue latency
-        jax.block_until_ready(carry["params"])
+        with obs_trace.get().span("executor.settle", cat="executor", step=t_abs):
+            jax.block_until_ready(carry["params"])
         wall = time.perf_counter() - t0
+        reg = obs_metrics.default_registry()
+        reg.counter("executor.chunks_total").inc(chunks)
+        reg.counter("executor.steps_total").inc(t_run)
+        reg.histogram("executor.run_wall_s").observe(wall)
 
         axis = 1 if sweep else 0
         cat = lambda ts: jax.tree.map(lambda *xs_: np.concatenate(xs_, axis=axis), *ts)
@@ -467,7 +480,9 @@ class ChainExecutor:
             n = min(self.chunk_steps, num_steps - t_run)
             fn, n_outer, thin = self._compile(n, False, None)
             xs = self._chunk_xs(t_run, t_abs, n, thin, keys, False)
-            carry, outs = fn(None, key, carry, xs)
+            with obs_trace.get().span("executor.chunk", cat="executor",
+                                      step=t_abs, n=n, stream=True):
+                carry, outs = fn(None, key, carry, xs)
             t_run += n
             t_abs += n
             boundary += 1
@@ -591,9 +606,12 @@ class ChainExecutor:
                 self._compiled[sig] = self._build_sharded(
                     n, mesh, chain_axis, carry, num_chains, specs
                 )
-            carry = self._compiled[sig](key, carry)
+            with obs_trace.get().span("executor.chunk", cat="executor",
+                                      step=done, n=n, sharded=True):
+                carry = self._compiled[sig](key, carry)
             done += n
-        jax.block_until_ready(carry["params"])
+        with obs_trace.get().span("executor.settle", cat="executor", step=done):
+            jax.block_until_ready(carry["params"])
         wall = time.perf_counter() - t0
         return RunResult(
             params=carry["params"], state=carry["state"], trace=None, stats=None,

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.distributed.compression import int8_codec
+from repro.obs import trace as obs_trace
 
 
 class ParkedCache(NamedTuple):
@@ -109,32 +110,34 @@ class CachePool:
         """Lift slot ``slot``'s cache out of the live pool.  With
         ``compress_parked`` float leaves go through the int8 block codec
         (~4x smaller); int leaves stay exact.  ``release`` frees the slot."""
-        leaves, treedef = jax.tree.flatten(
-            jax.tree.map(lambda a: a[:, slot], self.caches)
-        )
-        if self.compress_parked:
-            leaves = [
-                self._codec.encode(x) if jnp.issubdtype(x.dtype, jnp.floating) else x
-                for x in leaves
-            ]
-        if release:
-            self.release(slot)
-        return ParkedCache(leaves, treedef, self.compressed_parking)
+        with obs_trace.get().span("pool.park", cat="pool", slot=slot):
+            leaves, treedef = jax.tree.flatten(
+                jax.tree.map(lambda a: a[:, slot], self.caches)
+            )
+            if self.compress_parked:
+                leaves = [
+                    self._codec.encode(x) if jnp.issubdtype(x.dtype, jnp.floating) else x
+                    for x in leaves
+                ]
+            if release:
+                self.release(slot)
+            return ParkedCache(leaves, treedef, self.compressed_parking)
 
     def restore(self, parked: ParkedCache, slot: int | None = None) -> int:
         """Write a parked cache back into ``slot`` (or a newly acquired
         one); returns the slot index."""
         if slot is None:
             slot = self.acquire()
-        leaves = [
-            self._codec.decode(x) if isinstance(x, dict) and "q" in x else x
-            for x in parked.leaves
-        ]
-        one = jax.tree.unflatten(parked.treedef, leaves)
-        self.caches = jax.tree.map(
-            lambda full, x: full.at[:, slot].set(x.astype(full.dtype)), self.caches, one
-        )
-        return slot
+        with obs_trace.get().span("pool.restore", cat="pool", slot=slot):
+            leaves = [
+                self._codec.decode(x) if isinstance(x, dict) and "q" in x else x
+                for x in parked.leaves
+            ]
+            one = jax.tree.unflatten(parked.treedef, leaves)
+            self.caches = jax.tree.map(
+                lambda full, x: full.at[:, slot].set(x.astype(full.dtype)), self.caches, one
+            )
+            return slot
 
     @property
     def compressed_parking(self) -> bool:
@@ -326,6 +329,10 @@ class BlockAllocator:
         self.ctx[slot] = prompt.size
         self._owned[slot] = owned
         self._reserved[slot] = total - now
+        obs_trace.get().instant(
+            "alloc.reserve", cat="alloc", slot=slot, pages=len(owned),
+            reserved=total - now, free=len(self._free),
+        )
         return row
 
     # -- decode-time growth --------------------------------------------------
@@ -346,6 +353,7 @@ class BlockAllocator:
             self.tables[slot, j] = b
             self._owned[slot].append(b)
             self._reserved[slot] = max(0, self._reserved[slot] - 1)
+            obs_trace.get().instant("alloc.grow", cat="alloc", slot=slot, page=b)
 
     def advance(self, slot: int) -> None:
         self.ctx[slot] += 1
@@ -355,11 +363,16 @@ class BlockAllocator:
     def release(self, slot: int) -> None:
         if slot not in self._owned:
             raise ValueError(f"release of non-admitted slot {slot}")
-        for b in self._owned.pop(slot):
+        owned = self._owned.pop(slot)
+        for b in owned:
             self._decref(b)
         self.tables[slot] = 0
         self.ctx[slot] = 0
         self._reserved.pop(slot, None)
+        obs_trace.get().instant(
+            "alloc.free", cat="alloc", slot=slot, pages=len(owned),
+            free=len(self._free),
+        )
 
     # -- invariants (property-test surface) ----------------------------------
 
@@ -538,21 +551,22 @@ class PagedCachePool:
         """Gather (copy) this slot's pages out of the pool in logical block
         order.  Shared prefix pages are COPIED, not moved — other sharers
         keep serving from them."""
-        pages = self._slot_pages(slot)
-        idx = jnp.asarray(pages, jnp.int32)
-        gathered = jax.tree.map(
-            lambda leaf: jnp.take(leaf, idx, axis=_page_axis(leaf)), self.caches
-        )
-        leaves, treedef = jax.tree.flatten(gathered)
-        if self.compress_parked:
-            leaves = [
-                self._codec.encode(x) if jnp.issubdtype(x.dtype, jnp.floating) else x
-                for x in leaves
-            ]
-        ctx = int(self.alloc.ctx[slot])
-        if release:
-            self.release(slot)
-        return PagedParked(leaves, treedef, self.compress_parked, ctx, len(pages))
+        with obs_trace.get().span("pool.park", cat="pool", slot=slot):
+            pages = self._slot_pages(slot)
+            idx = jnp.asarray(pages, jnp.int32)
+            gathered = jax.tree.map(
+                lambda leaf: jnp.take(leaf, idx, axis=_page_axis(leaf)), self.caches
+            )
+            leaves, treedef = jax.tree.flatten(gathered)
+            if self.compress_parked:
+                leaves = [
+                    self._codec.encode(x) if jnp.issubdtype(x.dtype, jnp.floating) else x
+                    for x in leaves
+                ]
+            ctx = int(self.alloc.ctx[slot])
+            if release:
+                self.release(slot)
+            return PagedParked(leaves, treedef, self.compress_parked, ctx, len(pages))
 
     def restore(self, parked: PagedParked, slot: int | None = None,
                 max_new: int = 1) -> int:
@@ -563,6 +577,8 @@ class PagedCachePool:
             raise RuntimeError("not enough free pages to restore parked cache")
         if slot is None:
             slot = self.acquire()
+        restore_span = obs_trace.get().span("pool.restore", cat="pool", slot=slot)
+        restore_span.__enter__()
         a = self.alloc
         if slot in a._owned:
             raise ValueError(f"slot {slot} already holds pages")
@@ -588,6 +604,7 @@ class PagedCachePool:
             return jnp.moveaxis(moved, 0, ax)
 
         self.caches = jax.tree.map(scatter, self.caches, one)
+        restore_span.__exit__(None, None, None)
         return slot
 
     @property

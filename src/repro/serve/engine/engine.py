@@ -44,6 +44,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serve.sampling import GREEDY, SamplingParams, select_tokens
 
 from .bma import BMA_MODES, fused_mixture_select, mixture_logprobs
@@ -469,6 +471,10 @@ class ServeEngine:
             r.logprobs = np.asarray(act.logprobs, np.float32)
         results.append(r)
         self.pool.release(slot)
+        obs_trace.get().instant(
+            "serve.retire", cat="serve", rid=r.rid, slot=slot,
+            tokens=r.num_tokens, eos=bool(r.hit_eos),
+        )
 
     def _do_admit(self, req: Request, step: int, submit_s: float, active: dict, results: list, wall):
         need = int(req.prompt.size) + req.max_new
@@ -482,6 +488,11 @@ class ServeEngine:
         slot = self.pool.acquire()
         key = jax.random.fold_in(self._key_admit, req.rid)
         prompt = jnp.asarray(req.prompt)[None]
+        admit_span = obs_trace.get().span(
+            "serve.admit", cat="serve", rid=req.rid, slot=slot,
+            prompt_len=int(req.prompt.size), step=step,
+        )
+        admit_span.__enter__()
         if self.paged:
             table_row = self.pool.admit_blocks(
                 slot, req.prompt, req.max_new, self.registry.version
@@ -511,6 +522,7 @@ class ServeEngine:
                 key,
             )
         self.pool.caches, self._tokens, self._done, self._budget, tok, slot_done, logp = out
+        admit_span.__exit__(None, None, None)
         now = wall()
         res = RequestResult(rid=req.rid, prompt_len=int(req.prompt.size), admitted_step=step)
         res.first_token_s = now - submit_s
@@ -575,6 +587,12 @@ class ServeEngine:
                 self.refresher.pump(step)
             self._note_version()  # promotions (any source) invalidate stale prefixes
             if active:
+                # span covers dispatch AND the emissions fetch below — the
+                # true per-tick wall time including device compute
+                tick_span = obs_trace.get().span(
+                    "serve.decode_tick", cat="serve", step=step, active=len(active),
+                )
+                tick_span.__enter__()
                 key = jax.random.fold_in(self._key_decode, step)
                 if self.paged:
                     # Host-side growth first: make sure every live slot owns
@@ -613,6 +631,7 @@ class ServeEngine:
                 emit_np = np.asarray(emit)
                 done_np = np.asarray(done)
                 logp_np = np.asarray(logp) if self.record_logprobs else None
+                tick_span.__exit__(None, None, None)
                 now = wall()
                 for slot, act in list(active.items()):
                     act.tokens.append(int(emit_np[slot]))
@@ -630,7 +649,7 @@ class ServeEngine:
                 self._finalize(slot, act, step, now, results)
                 del active[slot]
         results.sort(key=lambda r: r.rid)
-        return ServeReport(
+        report = ServeReport(
             results=results,
             wall_s=wall(),
             decode_steps=self.decode_steps - steps_at_start,
@@ -640,3 +659,36 @@ class ServeEngine:
             registry=self.registry.stats(),
             refresher=self.refresher.stats() if self.refresher else None,
         )
+        self._absorb_metrics(report)
+        return report
+
+    def _absorb_metrics(self, report: ServeReport) -> None:
+        """Fold the run's legacy stats() dicts + per-request latencies into
+        the canonical metrics registry (DESIGN.md §11).  Host-side, once per
+        run, on already-materialized values — no device syncs added."""
+        reg = obs_metrics.default_registry()
+        reg.absorb("serve.engine", {
+            "decode_steps": self.decode_steps,
+            "total_tokens": report.total_tokens,
+            "retired": len(report.results),
+            "wall_s": report.wall_s,
+            "tokens_per_s": report.tokens_per_s,
+        })
+        if self.paged:
+            # PagedCachePool.stats() merges the allocator dict in; absorb the
+            # allocator under its own namespace and the rest under the pool's
+            alloc = self.pool.alloc.stats()
+            reg.absorb("serve.alloc", alloc)
+            reg.absorb("serve.pool", {
+                k: v for k, v in report.pool.items() if k not in alloc
+            })
+        else:
+            reg.absorb("serve.pool", report.pool)
+        reg.absorb("serve.registry", report.registry)
+        if report.refresher:
+            reg.absorb("serve.refresh", report.refresher)
+        lat = reg.histogram("serve.request.latency_s")
+        ftl = reg.histogram("serve.request.first_token_s")
+        for r in report.results:
+            lat.observe(r.latency_s)
+            ftl.observe(r.first_token_s)

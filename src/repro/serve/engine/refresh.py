@@ -57,6 +57,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.obs import trace as obs_trace
 from repro.run import ChainExecutor
 
 from .registry import SnapshotRegistry, _micro_split
@@ -108,6 +109,7 @@ class RefreshScheduler:
         members_of=None,
         device="auto",
         max_flip_deferrals: int | None = None,
+        sync_every: int | None = None,
     ):
         self.registry = registry
         self.members_of = members_of or (lambda p: p)
@@ -125,6 +127,13 @@ class RefreshScheduler:
         self._device_req = device
         self.device = None
         self._max_flip_deferrals = max_flip_deferrals
+        # Static sync-collective cadence of the bound sampler (EC s), used
+        # to host-RECONSTRUCT `sampler.sync_collective` trace instants at
+        # micro-chunk dispatch: the collective fires inside the compiled
+        # scan and cannot be observed from the host, but its step indices
+        # are determined by this cadence (DESIGN.md §11).  None = the
+        # sampler has no cross-chain collective (e.g. chainwise SGLD).
+        self.sync_every = int(sync_every) if sync_every else None
         self._engine = None
         self._ex = None
         self._stream = None
@@ -231,14 +240,24 @@ class RefreshScheduler:
         Nothing here blocks the host."""
         if self._cycle_t0 is None:
             self._cycle_t0 = time.perf_counter()
-        try:
-            snap = next(self._ensure_stream())
-        except StopIteration:
-            self.exhausted = True
-            return
+        tr = obs_trace.get()
+        prev_step = self.steps_done
+        with tr.span("refresh.micro_chunk", cat="refresh", from_step=prev_step):
+            try:
+                snap = next(self._ensure_stream())
+            except StopIteration:
+                self.exhausted = True
+                return
         self.micro_chunks += 1
         self.steps_done = snap.step
         self._probe = snap.probe
+        if tr.enabled and self.sync_every:
+            # reconstructed, not observed: every sync boundary the dispatched
+            # micro covered, at known step indices (see __init__)
+            s = self.sync_every
+            first = (prev_step // s + 1) * s  # next multiple of s after prev
+            for step in range(first, snap.step + 1, s):
+                tr.instant("sampler.sync_collective", cat="sampler", step=step)
         if snap.params is not None:
             # stage raw (sampler-device) — the gate reduction runs where the
             # candidate lives; a device_put here would block the pump on
@@ -264,11 +283,16 @@ class RefreshScheduler:
         if not ready and not force and may_defer:
             self._deferrals += 1
             self.flips_deferred += 1
+            obs_trace.get().instant(
+                "refresh.flip_deferred", cat="refresh", deferrals=self._deferrals
+            )
             return False
         t0 = time.perf_counter()
         # blocks only when not ready; placement of the ready candidate into
         # the engine's pinned layout is a bounded d2d copy
-        promoted = self.registry.flip_staged(place=self._place)
+        with obs_trace.get().span("refresh.flip", cat="refresh",
+                                  forced=force, verdict_ready=ready):
+            promoted = self.registry.flip_staged(place=self._place)
         if not ready:
             self.stall_wall_s += time.perf_counter() - t0
             self.decode_steps_stalled += 1
@@ -295,6 +319,9 @@ class RefreshScheduler:
             self._credit = min(self._credit + self._rate, 2.0 * micros_per_chunk)
             if self._credit >= 1.0 and not self._sampler_idle():
                 self.backpressure_ticks += 1
+                obs_trace.get().instant(
+                    "refresh.backpressure", cat="refresh", credit=self._credit
+                )
             while self._credit >= 1.0 and not self.exhausted and self._sampler_idle():
                 self._credit -= 1.0
                 self._dispatch_micro()

@@ -47,6 +47,7 @@ from typing import Any
 import jax
 
 from repro.diagnostics import ensemble_spread_device
+from repro.obs import trace as obs_trace
 from repro.run import ChainExecutor
 
 _health_jit = jax.jit(ensemble_spread_device)
@@ -111,7 +112,10 @@ class SnapshotRegistry:
         """Gate + swap.  Returns True iff ``candidate`` was promoted; on
         rejection the previous members keep serving unchanged."""
         self.stage(candidate)
-        return self.flip_staged()
+        # the overlapped scheduler traces its own flip (with defer context);
+        # this span covers the synchronous gate-and-fetch path
+        with obs_trace.get().span("refresh.flip", cat="refresh", sync=True):
+            return self.flip_staged()
 
     # -- overlapped promotion (stage now, flip later) ------------------------
 
@@ -130,6 +134,7 @@ class SnapshotRegistry:
             health = self.health_device(candidate)
         self._staged = (candidate, health)
         self.staged_total += 1
+        obs_trace.get().instant("refresh.stage", cat="refresh", staged=self.staged_total)
 
     def staged_ready(self) -> bool:
         """True iff the staged verdict has been computed — i.e. a flip would
@@ -259,11 +264,13 @@ class ChainRefresher:
         """Advance one micro-chunk; returns (hit a proposal boundary,
         promoted)."""
         t0 = time.perf_counter()
-        try:
-            snap = next(self._ensure_stream())
-        except StopIteration:
-            self.exhausted = True
-            return False, False
+        with obs_trace.get().span("refresh.micro_chunk", cat="refresh",
+                                  from_step=self.steps_done, sync=True):
+            try:
+                snap = next(self._ensure_stream())
+            except StopIteration:
+                self.exhausted = True
+                return False, False
         self.micro_chunks += 1
         self.steps_done = snap.step
         promoted = False

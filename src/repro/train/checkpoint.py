@@ -24,6 +24,9 @@ import numpy as np
 
 from repro.core import resample_chain_from_center
 from repro.core.ec_sghmc import ECSGHMCState
+from repro.obs import get_logger
+
+log = get_logger("ckpt")
 
 _SEP = "::"
 
@@ -108,7 +111,7 @@ def restore(ckpt_dir, params_template, state_template):
             step, payload, extra = _load_one(path, template)
             return step, payload["params"], payload["state"], extra
         except Exception as e:  # corrupted — try the previous one
-            print(f"[ckpt] skipping {path.name}: {e}")
+            log.warning(f"skipping {path.name}: {e}")
     return None
 
 
@@ -149,7 +152,7 @@ def restore_elastic(ckpt_dir, params_template, state_template, num_chains: int, 
             )
             return manifest["step"], params, state, {"elastic_resample": True}
         except Exception as e:
-            print(f"[ckpt] elastic restore failed for {path.name}: {e}")
+            log.warning(f"elastic restore failed for {path.name}: {e}")
     return None
 
 

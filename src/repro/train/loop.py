@@ -19,8 +19,11 @@ from typing import Callable, Optional
 
 import jax
 
+from repro.obs import get_logger
 from repro.run import ChainExecutor
 from . import checkpoint as ckpt_lib
+
+log = get_logger("loop")
 
 
 @dataclass
@@ -78,7 +81,7 @@ def run(
         )
         if got is not None:
             start, params, state, extra = got
-            print(f"[loop] resumed from step {start}" + (" (elastic)" if extra.get("elastic_resample") else ""))
+            log.info(f"resumed from step {start}" + (" (elastic)" if extra.get("elastic_resample") else ""))
 
     executor = ChainExecutor(
         step_fn=train_step,
@@ -105,7 +108,7 @@ def run(
             m["step"] = step_end
             m["wall_s"] = round(time.time() - t0, 2)
             history.append(m)
-            print(f"[loop] step {step_end}: " + " ".join(f"{k}={v:.5g}" for k, v in m.items() if k != "step"))
+            log.info(f"step {step_end}: " + " ".join(f"{k}={v:.5g}" for k, v in m.items() if k != "step"))
         if cfg.preempt_at is not None and step_end == cfg.preempt_at:
             raise Preempted(f"simulated preemption at step {step_end}")
 
